@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from typing import Dict, Iterable, List
+
+
+def emit_csv(rows: List[Dict], header: Iterable[str], file=None) -> None:
+    w = csv.DictWriter(file or sys.stdout, fieldnames=list(header),
+                       extrasaction="ignore")
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+
+
+def timer(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall us per call (post-warmup, blocked on device results)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

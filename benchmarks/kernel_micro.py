@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU container the interesting number is the ORACLE (XLA) path --
+interpret-mode Pallas timing is a Python emulation, reported only for
+completeness.  On TPU the same harness times the compiled kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import timer
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    on_tpu = jax.default_backend() == "tpu"
+    for (l, k, m) in [(1024, 32, 1024), (4096, 64, 4096)]:
+        M = jnp.linalg.qr(jax.random.normal(key, (l, k)))[0]
+        G = jax.random.normal(key, (l, m))
+        ref_encode = jax.jit(lambda M, G: ref.encode_ref(M, G))
+        us_ref = timer(ref_encode, M, G)
+        row = {
+            "table": "kernel", "kernel": "encode", "shape": f"l{l}_k{k}_m{m}",
+            "us_ref_xla": round(us_ref, 1),
+        }
+        if on_tpu:
+            us_k = timer(lambda M, G: ops.encode(M, G), M, G)
+            row["us_pallas"] = round(us_k, 1)
+        rows.append(row)
+
+        A = M.T @ G
+        ref_decode = jax.jit(lambda M, A: ref.decode_ref(M, A))
+        rows.append({
+            "table": "kernel", "kernel": "decode", "shape": f"l{l}_k{k}_m{m}",
+            "us_ref_xla": round(timer(ref_decode, M, A), 1),
+        })
+
+    g = jax.random.normal(key, (1 << 20,))
+    q = jax.jit(lambda g, k: ops.block_quantize(g, k, use_kernel=False))
+    rows.append({
+        "table": "kernel", "kernel": "block_quant_1M", "shape": "n1048576",
+        "us_ref_xla": round(timer(q, g, key), 1),
+    })
+    return rows
+
+
+HEADER = ["table", "kernel", "shape", "us_ref_xla", "us_pallas"]

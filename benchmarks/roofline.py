@@ -1,0 +1,60 @@
+"""Roofline report: renders reports/dryrun.json (written by
+``python -m repro.launch.dryrun``) into the EXPERIMENTS.md Sec-Roofline table.
+
+Reports, per (arch x shape): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS (useful-compute ratio), and per-device
+memory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+REPORT = os.environ.get("DRYRUN_REPORT", "reports/dryrun.json")
+
+
+def run(report_path: str = REPORT) -> List[Dict]:
+    if not os.path.exists(report_path):
+        return [{
+            "table": "roofline", "arch": "(run repro.launch.dryrun first)",
+            "shape": "", "status": f"missing {report_path}",
+        }]
+    with open(report_path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        row = {
+            "table": "roofline",
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "method": r.get("method", "-"),
+            "mesh": "2pod" if r.get("multi_pod") else "1pod",
+            "status": r["status"],
+        }
+        if r["status"] == "ok":
+            row.update({
+                "peak_gib": round(r["memory"]["peak_bytes_tpu"] / 2**30, 2)
+                if "peak_bytes_tpu" in r.get("memory", {})
+                else round(r["memory"]["peak_bytes"] / 2**30, 2),
+                "fits": r.get("fits_hbm"),
+            })
+            if "roofline" in r:
+                rl = r["roofline"]
+                row.update({
+                    "compute_ms": round(rl["compute_s"] * 1e3, 2),
+                    "memory_ms": round(rl["memory_s"] * 1e3, 2),
+                    "collective_ms": round(rl["collective_s"] * 1e3, 2),
+                    "bottleneck": rl["bottleneck"],
+                    "useful_ratio": round(r.get("useful_ratio", 0), 3),
+                })
+        elif r["status"] == "skipped":
+            row["status"] = f"skipped: {r['skip_reason'][:40]}"
+        rows.append(row)
+    return rows
+
+
+HEADER = ["table", "arch", "shape", "method", "mesh", "status", "peak_gib",
+          "fits", "compute_ms", "memory_ms", "collective_ms", "bottleneck",
+          "useful_ratio"]

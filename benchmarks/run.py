@@ -1,0 +1,65 @@
+"""Benchmark harness -- one module per paper table/figure.
+
+  table3   Table III  method comparison across data distributions
+  table4   Table IV   GradESTC ablation (-first/-all/-k/full/+ef)
+  fig1     Figure 1/2 temporal gradient correlation + parameter sizes
+  fig9     Figure 9   k sensitivity
+  kernel   --         codec kernel microbenchmarks
+  roofline Sec 4/5    dry-run roofline table (reads reports/dryrun.json)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only table3,fig1] [--rounds N]
+
+Prints ``name,...`` CSV blocks per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma list of {table3,table4,fig1,fig9,kernel,roofline}")
+    ap.add_argument("--rounds", type=int, default=12)
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else {
+        "table3", "table4", "fig1", "fig9", "kernel", "roofline"}
+
+    from .common import emit_csv
+
+    t0 = time.time()
+    if "table3" in want:
+        from . import table3_comparison as t3
+        print("# Table III -- method comparison", flush=True)
+        emit_csv(t3.run(rounds=args.rounds), t3.HEADER)
+    if "table4" in want:
+        from . import table4_ablation as t4
+        print("# Table IV -- ablation", flush=True)
+        emit_csv(t4.run(rounds=args.rounds), t4.HEADER)
+    if "fig1" in want:
+        from . import fig1_temporal as f1
+        print("# Figure 1/2 -- temporal correlation", flush=True)
+        rows = f1.run(rounds=args.rounds)
+        emit_csv(f1.adjacent_summary(rows), f1.HEADER_ADJ)
+    if "fig9" in want:
+        from . import fig9_k_sensitivity as f9
+        print("# Figure 9 -- k sensitivity", flush=True)
+        emit_csv(f9.run(rounds=args.rounds), f9.HEADER)
+    if "kernel" in want:
+        from . import kernel_micro as km
+        print("# Kernel microbenchmarks", flush=True)
+        emit_csv(km.run(), km.HEADER)
+    if "roofline" in want:
+        from . import roofline as rl
+        print("# Roofline (from dry-run)", flush=True)
+        emit_csv(rl.run(), rl.HEADER)
+    print(f"# total wall: {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

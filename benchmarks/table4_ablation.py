@@ -1,0 +1,43 @@
+"""Paper Table IV: ablation of GradESTC components.
+
+Variants: -first (no basis updates), -all (full re-init every round),
+-k (incremental but fixed d = k), full (dynamic d), +ef (beyond-paper error
+feedback).  "sum_d" is the computational-overhead proxy the paper reports.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.fl import FLConfig, run_fl
+
+VARIANTS = ["gradestc-first", "gradestc-all", "gradestc-k", "gradestc",
+            "gradestc-ef"]
+
+
+def run(rounds: int = 15, n_clients: int = 6, seed: int = 0) -> List[Dict]:
+    rows = []
+    base = None
+    for variant in VARIANTS:
+        cfg = FLConfig(
+            method=variant, rounds=rounds, n_clients=n_clients,
+            local_steps=2, batch=8, seq=48, seed=seed,
+            eval_every=max(1, rounds // 6),
+        )
+        res = run_fl(cfg)
+        if variant == "gradestc":
+            base = res
+        rows.append({
+            "table": "table4",
+            "variant": variant,
+            "best_loss": round(min(res.eval_loss), 4),
+            "best_acc": round(max(res.eval_acc), 4),
+            "total_uplink_mb": round(res.ledger.uplink_total / 2**20, 3),
+            "sum_d": res.extra.get("sum_d", ""),
+            "wall_s": round(res.wall_s, 1),
+        })
+    return rows
+
+
+HEADER = ["table", "variant", "best_loss", "best_acc", "total_uplink_mb",
+          "sum_d", "wall_s"]

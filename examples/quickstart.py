@@ -1,0 +1,69 @@
+"""Quickstart: compress one gradient tensor with GradESTC.
+
+Shows the raw codec API on a single reshaped gradient matrix: init round,
+three update rounds against temporally-correlated gradients, bytes on the
+wire vs raw, and the reconstruction error.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gradestc as ge
+from repro.core.metrics import bytes_h
+from repro.core.reshaping import matrix_to_tensor, reshape_to_matrix
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # a fake (d_in=512, d_out=384) weight-gradient evolving slowly over rounds
+    U = np.linalg.qr(rng.normal(size=(512, 12)))[0]
+
+    def next_grad():
+        nonlocal U
+        U = np.linalg.qr(U + 0.01 * rng.normal(size=U.shape))[0]
+        W = U @ rng.normal(size=(12, 384))
+        return jnp.asarray(W + 0.02 * rng.normal(size=W.shape), jnp.float32)
+
+    grad = next_grad()
+    # Orientation matters (paper Sec. III-A: "align l with natural structural
+    # boundaries"): the persistent factor U lives in the 512-dim column
+    # space of W, so the codec basis must span columns of W -- i.e. the
+    # length-l segments must walk down columns.  Row-major flattening makes
+    # segments out of *rows*, so we transpose first (the production path,
+    # repro.launch.steps._delta_to_G, picks this orientation automatically;
+    # it also aligns l with the tensor-parallel shard axis -- DESIGN.md S5).
+    orig_shape = grad.shape
+    G, _, l = reshape_to_matrix(grad.T, l=512)
+    m = G.shape[1]
+    k, d = 16, 8
+    print(f"gradient {orig_shape} -> G ({l} x {m}), k={k}, d={d}")
+    print(f"raw uplink per round: {bytes_h(G.size * 4)}")
+
+    state = ge.init_compressor(l, k, jax.random.PRNGKey(0))
+    server = ge.DecompressorState(M=jnp.zeros((l, k)))
+
+    for rnd in range(4):
+        G, _, _ = reshape_to_matrix(next_grad().T, l)
+        if rnd == 0:
+            state, payload, stats = ge.compress_init(state, G, k=k)
+            server, Ghat = ge.decompress(server, payload, init_basis=state.M)
+        else:
+            state, payload, stats = ge.compress_update(state, G, k=k, d=d)
+            server, Ghat = ge.decompress(server, payload)
+        wire = int(ge.payload_scalars(payload, l=l, m=m, k=k))
+        recon = matrix_to_tensor(Ghat, orig_shape[::-1]).T
+        print(f"round {rnd}: wire={bytes_h(wire):>12s}  "
+              f"replaced={int(stats.d_r):2d}/{k} basis vectors  "
+              f"rel_err={float(stats.recon_err):.4f}  "
+              f"ratio={wire / (G.size * 4):.4f}")
+        assert recon.shape == orig_shape
+
+    print("\nServer basis synchronized:",
+          bool(jnp.allclose(server.M, state.M, atol=1e-6)))
+
+
+if __name__ == "__main__":
+    main()

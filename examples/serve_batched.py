@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + decode with KV caches on a reduced
+architecture (pick any of the 10 assigned archs).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py --arch gemma3-1b --steps 24
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

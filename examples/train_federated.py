@@ -1,0 +1,50 @@
+"""End-to-end FL training driver: GradESTC vs FedAvg on the synthetic LM task.
+
+Trains a small transformer federatedly for a few hundred rounds (default 60
+for CPU friendliness; pass --rounds 300 for the full run), printing loss,
+accuracy, and exact cumulative uplink for both methods, then the savings.
+
+Run:  PYTHONPATH=src python examples/train_federated.py [--rounds N] [--alpha 0.5]
+"""
+
+import argparse
+
+from repro.core.metrics import bytes_h
+from repro.fl import FLConfig, run_fl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Dirichlet non-IID parameter (paper: 0.5 / 0.1)")
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    results = {}
+    for method in ("fedavg", "gradestc"):
+        print(f"\n=== {method} ===")
+        cfg = FLConfig(
+            method=method, rounds=args.rounds, n_clients=args.clients,
+            local_steps=args.local_steps, alpha=args.alpha,
+            batch=16, seq=64, eval_every=max(1, args.rounds // 10),
+        )
+        res = run_fl(cfg, progress=lambda r, info: print(
+            f"  round {r:4d}  loss={info['loss']:.4f}  acc={info['acc']:.4f}  "
+            f"uplink={bytes_h(info['uplink'])}", flush=True))
+        results[method] = res
+
+    fa, ge_ = results["fedavg"], results["gradestc"]
+    print("\n=== summary ===")
+    print(f"final loss : fedavg {fa.eval_loss[-1]:.4f}   gradestc {ge_.eval_loss[-1]:.4f}")
+    print(f"final acc  : fedavg {fa.eval_acc[-1]:.4f}   gradestc {ge_.eval_acc[-1]:.4f}")
+    print(f"uplink     : fedavg {bytes_h(fa.ledger.uplink_total)}   "
+          f"gradestc {bytes_h(ge_.ledger.uplink_total)}")
+    saving = 1 - ge_.ledger.uplink_total / fa.ledger.uplink_total
+    print(f"uplink saved by GradESTC: {saving:.1%}  "
+          f"(paper reports 86.7% vs FedAvg on CIFAR-10 IID at full scale)")
+
+
+if __name__ == "__main__":
+    main()

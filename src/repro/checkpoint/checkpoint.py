@@ -1,0 +1,77 @@
+"""Minimal but real checkpointing: pytree <-> flat-key .npz.
+
+* keys encode the tree path ("layers/attn_wq", "opt/slots/0/...");
+* atomic write (tmp file + rename) so an interrupted save never corrupts the
+  latest checkpoint;
+* restore takes a *template* pytree (for structure + dtypes) so jit-produced
+  sharded arrays round-trip as host numpy and are re-committed by the caller.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # .npz cannot serialize ml_dtypes; widen to f32 (the restore
+            # template narrows back)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    """Write ``<path>/ckpt_<step>.npz`` atomically; returns the file path."""
+    os.makedirs(path, exist_ok=True)
+    target = os.path.join(path, f"ckpt_{step:08d}.npz")
+    # suffix must be .npz: np.savez silently appends it otherwise, and the
+    # atomic rename would move an empty file.
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **_flatten(tree))
+        os.replace(tmp, target)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return target
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(path)
+        if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, template: Any) -> Any:
+    """Load ``ckpt_<step>.npz`` into the structure of ``template``."""
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,40 @@
+"""repro.core -- GradESTC: spatio-temporal gradient compression for FL.
+
+Public API surface of the paper's contribution:
+
+  * reshaping   -- WHDC flatten + (l, m) segmentation (Sec. III-A.a)
+  * rsvd        -- randomized SVD (Halko et al.), the paper's decomposition tool
+  * gradestc    -- compressor / decompressor pair (Algorithms 1-2)
+  * policy      -- parameter-dominant layer selection and (k, l) assignment
+  * baselines   -- Top-k / FedPAQ / signSGD / SVDFed / FedQClip comparators
+  * error_feedback -- EF memory (paper Sec. VI future work; beyond-paper)
+  * metrics     -- exact uplink/downlink byte accounting
+"""
+
+from . import baselines, error_feedback, gradestc, metrics, policy, reshaping, rsvd
+from .gradestc import (
+    CompressorState,
+    DecompressorState,
+    Payload,
+    CompressStats,
+    compress,
+    compress_init,
+    compress_update,
+    decompress,
+    init_compressor,
+    next_candidate_count,
+)
+from .policy import CompressionPolicy, LayerPlan, make_policy
+from .reshaping import matrix_to_tensor, reshape_to_matrix, segment, unsegment
+from .rsvd import randomized_svd
+
+__all__ = [
+    "baselines", "error_feedback", "gradestc", "metrics", "policy",
+    "reshaping", "rsvd",
+    "CompressorState", "DecompressorState", "Payload", "CompressStats",
+    "compress", "compress_init", "compress_update", "decompress",
+    "init_compressor", "next_candidate_count",
+    "CompressionPolicy", "LayerPlan", "make_policy",
+    "matrix_to_tensor", "reshape_to_matrix", "segment", "unsegment",
+    "randomized_svd",
+]

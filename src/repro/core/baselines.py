@@ -1,0 +1,176 @@
+"""Baseline uplink compressors the paper compares against (Table III).
+
+Every baseline implements the same functional interface over a *flat* gradient
+vector ``g in R^n``::
+
+    state = <Name>State.init(n, ...)
+    state, ghat, scalars = <name>_compress(state, g, key)
+
+``ghat`` is the server-side reconstruction (what enters aggregation) and
+``scalars`` the number of 32-bit-equivalent scalars transmitted uplink
+(fractional for sub-32-bit codes), so methods are compared in bytes exactly
+as the paper does.
+
+Implemented:
+  * FedAvg       -- identity (no compression), the uncompressed reference.
+  * Top-k        -- magnitude sparsification with error accumulation
+                    (Stich et al., ref [23]).
+  * FedPAQ       -- stochastic uniform quantization to 2^b levels
+                    (Reisizadeh et al., ref [21]).
+  * signSGD      -- 1-bit sign compression with scale (Bernstein et al. [20]).
+  * SVDFed       -- shared low-rank basis from the aggregated gradient,
+                    clients upload coefficients; basis re-fit when the fitting
+                    error degrades past a threshold (Wang et al., ref [12]).
+  * FedQClip     -- clipped SGD + uniform quantization (Qu et al., ref [42]).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rsvd import randomized_svd
+
+__all__ = [
+    "TopKState", "topk_compress",
+    "QuantState", "fedpaq_compress", "quantize_stochastic", "dequantize",
+    "sign_compress",
+    "SVDFedState", "svdfed_client_compress", "svdfed_server_refresh",
+    "fedqclip_compress",
+]
+
+
+# --------------------------------------------------------------------------
+# Top-k sparsification with error memory
+# --------------------------------------------------------------------------
+
+class TopKState(NamedTuple):
+    memory: jnp.ndarray        # (n,) error accumulation
+
+    @staticmethod
+    def init(n: int, dtype=jnp.float32) -> "TopKState":
+        return TopKState(memory=jnp.zeros((n,), dtype))
+
+
+def topk_compress(
+    state: TopKState, g: jnp.ndarray, k: int
+) -> Tuple[TopKState, jnp.ndarray, jnp.ndarray]:
+    """Keep the k largest-magnitude entries of (g + memory)."""
+    corrected = g + state.memory
+    vals, idx = jax.lax.top_k(jnp.abs(corrected), k)
+    ghat = jnp.zeros_like(corrected).at[idx].set(corrected[idx])
+    new_mem = corrected - ghat
+    # transmitted: k values + k int32 indices
+    scalars = jnp.asarray(2 * k, jnp.float32)
+    return TopKState(memory=new_mem), ghat, scalars
+
+
+# --------------------------------------------------------------------------
+# Stochastic uniform quantization (FedPAQ)
+# --------------------------------------------------------------------------
+
+class QuantState(NamedTuple):
+    """FedPAQ is stateless; kept for interface uniformity."""
+
+    @staticmethod
+    def init(n: int = 0) -> "QuantState":
+        return QuantState()
+
+
+def quantize_stochastic(
+    g: jnp.ndarray, key: jax.Array, bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unbiased stochastic uniform quantizer on [-scale, scale].
+
+    Returns (codes int32 in [0, 2^bits-1], scale).
+    """
+    levels = (1 << bits) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    x = (g / scale + 1.0) * (levels / 2.0)          # [0, levels]
+    lo = jnp.floor(x)
+    p_up = x - lo
+    up = jax.random.bernoulli(key, p_up, g.shape)
+    codes = jnp.clip(lo + up.astype(g.dtype), 0, levels).astype(jnp.int32)
+    return codes, scale
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    return (codes.astype(jnp.float32) * (2.0 / levels) - 1.0) * scale
+
+
+def fedpaq_compress(
+    state: QuantState, g: jnp.ndarray, key: jax.Array, bits: int = 8
+) -> Tuple[QuantState, jnp.ndarray, jnp.ndarray]:
+    codes, scale = quantize_stochastic(g, key, bits)
+    ghat = dequantize(codes, scale, bits).astype(g.dtype)
+    scalars = jnp.asarray(g.size * bits / 32.0 + 1.0, jnp.float32)
+    return state, ghat, scalars
+
+
+# --------------------------------------------------------------------------
+# signSGD
+# --------------------------------------------------------------------------
+
+def sign_compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.mean(jnp.abs(g))
+    ghat = jnp.sign(g) * scale
+    scalars = jnp.asarray(g.size / 32.0 + 1.0, jnp.float32)
+    return ghat, scalars
+
+
+# --------------------------------------------------------------------------
+# SVDFed: globally shared basis, coefficient-only uplink between refreshes
+# --------------------------------------------------------------------------
+
+class SVDFedState(NamedTuple):
+    M: jnp.ndarray             # (l, k) shared basis (server-fit)
+    err_threshold: jnp.ndarray # () refit when relative error exceeds this
+    initialized: jnp.ndarray   # () bool
+
+    @staticmethod
+    def init(l: int, k: int, gamma: float = 8.0, dtype=jnp.float32) -> "SVDFedState":
+        # gamma follows the paper's SVDFed hyperparameter: larger gamma ->
+        # tolerate more error before a (costly) basis re-fit.
+        return SVDFedState(
+            M=jnp.zeros((l, k), dtype),
+            err_threshold=jnp.asarray(gamma / 100.0, jnp.float32),
+            initialized=jnp.zeros((), jnp.bool_),
+        )
+
+
+def svdfed_client_compress(
+    state: SVDFedState, G: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Client: upload coefficients A = M^T G; flags a refresh request if the
+    fitting error is too large.  Returns (A, rel_err, scalars)."""
+    A = state.M.T @ G
+    E = G - state.M @ A
+    rel = jnp.sqrt(jnp.sum(E * E) / jnp.maximum(jnp.sum(G * G), 1e-30))
+    scalars = jnp.asarray(A.size, jnp.float32)
+    return A, rel, scalars
+
+
+def svdfed_server_refresh(
+    state: SVDFedState, G_agg: jnp.ndarray, key: jax.Array, k: int
+) -> SVDFedState:
+    """Server: re-fit the shared basis from the aggregated gradient matrix."""
+    U, _, _ = randomized_svd(key, G_agg, rank=k)
+    return state._replace(M=U, initialized=jnp.ones((), jnp.bool_))
+
+
+# --------------------------------------------------------------------------
+# FedQClip: clipping + quantization
+# --------------------------------------------------------------------------
+
+def fedqclip_compress(
+    g: jnp.ndarray, key: jax.Array, clip: float, bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    norm = jnp.linalg.norm(g)
+    g_clipped = g * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    codes, scale = quantize_stochastic(g_clipped, key, bits)
+    ghat = dequantize(codes, scale, bits).astype(g.dtype)
+    scalars = jnp.asarray(g.size * bits / 32.0 + 1.0, jnp.float32)
+    return ghat, scalars

@@ -1,0 +1,43 @@
+"""Error-feedback memory (paper Sec. VI, listed as future work).
+
+Classic EF-SGD (Karimireddy et al. 2019 style): the client accumulates the
+compression residual and adds it back before the next compression::
+
+    c_t    = Compress(g_t + m_t)
+    m_t+1  = g_t + m_t - Decompress(c_t)
+
+For GradESTC the residual is exactly the fitting error ``E`` reshaped back to
+the flat gradient, so EF integrates with zero extra compute: we feed
+``G + M_seg`` (segmented memory) into the compressor and store the new
+fitting error as memory.
+
+This is a *beyond-paper* extension (flagged in DESIGN.md Sec. 7) and is off by
+default; EXPERIMENTS.md quantifies its effect separately from the faithful
+reproduction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["EFState", "ef_inject", "ef_update"]
+
+
+class EFState(NamedTuple):
+    memory: jnp.ndarray     # same shape as the segmented gradient matrix G
+
+    @staticmethod
+    def init(l: int, m: int, dtype=jnp.float32) -> "EFState":
+        return EFState(memory=jnp.zeros((l, m), dtype))
+
+
+def ef_inject(state: EFState, G: jnp.ndarray, decay: float = 1.0) -> jnp.ndarray:
+    """Gradient handed to the compressor: G + decayed residual memory."""
+    return G + decay * state.memory.astype(G.dtype)
+
+
+def ef_update(state: EFState, G_injected: jnp.ndarray, Ghat: jnp.ndarray) -> EFState:
+    """Store the new residual (exactly the compressor's fitting error)."""
+    return EFState(memory=(G_injected - Ghat).astype(state.memory.dtype))

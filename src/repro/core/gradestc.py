@@ -1,0 +1,275 @@
+"""GradESTC compressor / decompressor (paper Algorithms 1 and 2).
+
+Pure-functional JAX implementation.  A compressor-decompressor *pair* exists
+per compressed layer group; its state is the orthonormal basis ``M`` shared
+(by construction) between client and server.
+
+Key departures from the PyTorch pseudocode, required by XLA (documented in
+DESIGN.md "Assumptions changed"):
+
+* The number of SVD candidates ``d`` is a **static** argument of the jitted
+  step.  The paper's dynamic rule ``d* = min(alpha*d_r + beta, k)``
+  (Formula 13) runs in the host round loop on the concrete ``d_r`` statistic
+  and re-buckets ``d`` to bounded set of values to limit recompilation
+  (see :func:`next_candidate_count`).
+
+* The wire payload uses a fixed-capacity buffer of ``d`` replacement vectors
+  with a validity count ``d_r``; byte accounting (``metrics.py``) charges only
+  the ``d_r`` valid entries, matching the paper's
+  ``C = k*m + d_r*l + k`` (Formula 14).
+
+* Everything is written over a leading *group* axis so that one ``vmap``
+  covers all layers of a stack (and another covers clients).
+
+The replacement rule (Formulas 11-12): stack coefficients
+``A_oe = [A; A_e]``, score each basis vector by its squared coefficient row
+norm ``R_u = ||A_oe[u, :]||^2``, keep the top-k rows.  Old columns that fall
+out of the top-k are overwritten *in place* (index set P) by the entering
+candidates in index order.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rsvd import randomized_svd
+
+__all__ = [
+    "CompressorState",
+    "DecompressorState",
+    "Payload",
+    "CompressStats",
+    "init_compressor",
+    "compress_init",
+    "compress_update",
+    "compress",
+    "decompress",
+    "apply_payload",
+    "reconstruct",
+    "next_candidate_count",
+    "payload_scalars",
+]
+
+
+class CompressorState(NamedTuple):
+    """Client-side state for one compressed layer group."""
+
+    M: jnp.ndarray          # (l, k) orthonormal basis
+    key: jax.Array          # PRNG key for randomized SVD
+    initialized: jnp.ndarray  # () bool
+
+
+class DecompressorState(NamedTuple):
+    """Server-side mirror of the basis."""
+
+    M: jnp.ndarray          # (l, k)
+
+
+class Payload(NamedTuple):
+    """What crosses the uplink for one layer group in one round.
+
+    ``new_vectors``/``replaced_mask`` encode the paper's (P, M-set); entries
+    beyond ``d_r`` are zero and never read by the decompressor.
+    """
+
+    replaced_mask: jnp.ndarray   # (k,) bool -- True where M[:, j] is replaced
+    new_vectors: jnp.ndarray     # (d, l)   -- entering basis vectors, rank order
+    coeffs: jnp.ndarray          # (k, m)   -- updated combination coefficients A*
+    d_r: jnp.ndarray             # ()       -- number of valid replacement vectors
+    init: jnp.ndarray            # () bool  -- True on the initialization round
+
+
+class CompressStats(NamedTuple):
+    d_r: jnp.ndarray             # () int32 number of replaced basis vectors
+    recon_err: jnp.ndarray       # () relative Frobenius reconstruction error
+    energy_kept: jnp.ndarray     # () ||M M^T G||_F^2 / ||G||_F^2  (= chi_k^2)
+
+
+def init_compressor(l: int, k: int, key: jax.Array, dtype=jnp.float32) -> CompressorState:
+    return CompressorState(
+        M=jnp.zeros((l, k), dtype),
+        key=key,
+        initialized=jnp.zeros((), jnp.bool_),
+    )
+
+
+def _stats(G: jnp.ndarray, Ghat: jnp.ndarray, d_r: jnp.ndarray) -> CompressStats:
+    gnorm = jnp.sum(G.astype(jnp.float32) ** 2)
+    err = jnp.sum((G - Ghat).astype(jnp.float32) ** 2)
+    safe = jnp.maximum(gnorm, 1e-30)
+    return CompressStats(
+        d_r=d_r.astype(jnp.int32),
+        recon_err=jnp.sqrt(err / safe),
+        energy_kept=1.0 - err / safe,
+    )
+
+
+def compress_init(
+    state: CompressorState, G: jnp.ndarray, *, k: int
+) -> Tuple[CompressorState, Payload, CompressStats]:
+    """First-round compression (Alg. 1 lines 2-8): basis from rSVD of G."""
+    l, m = G.shape
+    key, sub = jax.random.split(state.key)
+    U, S, Vt = randomized_svd(sub, G, rank=k)
+    M = U                                    # (l, k)
+    A = S[:, None] * Vt                      # == M^T G for exact SVD
+    payload = Payload(
+        replaced_mask=jnp.ones((k,), jnp.bool_),
+        new_vectors=M.T,                     # all k vectors ship on round 0
+        coeffs=A,
+        d_r=jnp.asarray(k, jnp.int32),
+        init=jnp.ones((), jnp.bool_),
+    )
+    new_state = CompressorState(M=M, key=key, initialized=jnp.ones((), jnp.bool_))
+    return new_state, payload, _stats(G, M @ A, jnp.asarray(k))
+
+
+def compress_update(
+    state: CompressorState, G: jnp.ndarray, *, k: int, d: int
+) -> Tuple[CompressorState, Payload, CompressStats]:
+    """Steady-state compression (Alg. 1 lines 9-29).
+
+    ``d`` (number of candidate vectors from the fitting error) is static.
+    """
+    l, m = G.shape
+    M = state.M
+    key, sub = jax.random.split(state.key)
+
+    # --- spatial projection onto the carried-over basis -------------------
+    A = M.T @ G                                   # (k, m)   Formula 4
+    E = G - M @ A                                 # (l, m)   Formula 6
+
+    # --- candidates from the fitting error (orthogonal to M by Formula 9) -
+    Ue, Se, Vte = randomized_svd(sub, E, rank=d)
+    Me = Ue                                       # (l, d)
+    Ae = Se[:, None] * Vte                        # (d, m) == Me^T E == Me^T G
+
+    # --- contribution scores and top-k retention (Formulas 11-12) ---------
+    R_old = jnp.sum(A.astype(jnp.float32) ** 2, axis=1)    # (k,)
+    R_new = jnp.sum(Ae.astype(jnp.float32) ** 2, axis=1)   # (d,)
+    R = jnp.concatenate([R_old, R_new])                    # (k+d,)
+    #
+
+    # membership of the top-k by value, ties broken toward old vectors
+    # (old indices come first in R, jax.lax.top_k is stable on index order).
+    _, top_idx = jax.lax.top_k(R, k)
+    in_top = jnp.zeros((k + d,), jnp.bool_).at[top_idx].set(True)
+
+    replaced = ~in_top[:k]                        # (k,) old columns leaving
+    entering = in_top[k:]                         # (d,) candidates entering
+    d_r = jnp.sum(entering).astype(jnp.int32)     # == jnp.sum(replaced)
+
+    # Pair the i-th replaced slot with the i-th entering candidate.
+    repl_rank = jnp.cumsum(replaced.astype(jnp.int32)) - 1        # (k,)
+    # entering candidate indices in index order, packed to the front:
+    enter_order = jnp.argsort(~entering, stable=True)             # (d,)
+    src = enter_order[jnp.clip(repl_rank, 0, d - 1)]              # (k,)
+
+    M_new = jnp.where(replaced[None, :], Me[:, src], M)           # (l, k)
+    A_new = jnp.where(replaced[:, None], Ae[src, :], A)           # (k, m)
+
+    # Wire buffer: entering vectors packed in rank order, zero padded.
+    enter_rank = jnp.cumsum(entering.astype(jnp.int32)) - 1       # (d,)
+    buf = jnp.zeros((d, l), M.dtype)
+    buf = buf.at[jnp.where(entering, enter_rank, d)].set(
+        Me.T, mode="drop"
+    )
+
+    payload = Payload(
+        replaced_mask=replaced,
+        new_vectors=buf,
+        coeffs=A_new,
+        d_r=d_r,
+        init=jnp.zeros((), jnp.bool_),
+    )
+    new_state = CompressorState(M=M_new, key=key, initialized=state.initialized)
+    return new_state, payload, _stats(G, M_new @ A_new, d_r)
+
+
+def compress(
+    state: CompressorState, G: jnp.ndarray, *, k: int, d: int
+) -> Tuple[CompressorState, Payload, CompressStats, jnp.ndarray]:
+    """Dispatch between init and update based on ``state.initialized``.
+
+    Both branches are traced (lax.cond) so the function is jit-stable across
+    rounds.  Returns ``(state, payload, stats, basis)`` where ``basis`` is the
+    full updated M -- only meaningful (and only *transmitted*) on the init
+    round.  The FL runtime avoids gathering it in steady state by using
+    :func:`compress_init` for round 0 and :func:`compress_update` afterwards;
+    this cond-based variant exists for single-jit multi-round loops and tests.
+    """
+
+    def _init(st):
+        st2, p, s = compress_init(st, G, k=k)
+        # pad/crop the init payload to the (d, l) update buffer layout; the
+        # full basis additionally travels in the `basis` slot (charged once
+        # by the byte accounting).
+        nv = jnp.zeros((d, G.shape[0]), st.M.dtype)
+        nv = nv.at[: min(d, k)].set(p.new_vectors[: min(d, k)])
+        return st2, Payload(p.replaced_mask, nv, p.coeffs, p.d_r, p.init), s, st2.M
+
+    def _update(st):
+        st2, p, s = compress_update(st, G, k=k, d=d)
+        return st2, p, s, st2.M
+
+    new_state, payload, stats, basis = jax.lax.cond(
+        state.initialized, _update, _init, state
+    )
+    return new_state, payload, stats, basis
+
+
+def decompress(
+    state: DecompressorState, payload: Payload, init_basis: jnp.ndarray | None = None
+) -> Tuple[DecompressorState, jnp.ndarray]:
+    """Server side (Alg. 2): update the mirrored basis, reconstruct G-hat."""
+    M = state.M
+    k = M.shape[1]
+    d = payload.new_vectors.shape[0]
+
+    repl_rank = jnp.cumsum(payload.replaced_mask.astype(jnp.int32)) - 1
+    src = jnp.clip(repl_rank, 0, d - 1)
+    M_upd = jnp.where(
+        payload.replaced_mask[None, :], payload.new_vectors[src].T, M
+    )
+    if init_basis is not None:
+        M_upd = jnp.where(payload.init, init_basis, M_upd)
+    Ghat = M_upd @ payload.coeffs
+    return DecompressorState(M=M_upd), Ghat
+
+
+def apply_payload(state: DecompressorState, payload: Payload) -> DecompressorState:
+    new_state, _ = decompress(state, payload)
+    return new_state
+
+
+def reconstruct(M: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    return M @ A
+
+
+def next_candidate_count(
+    d_r: int, k: int, alpha: float = 1.3, beta: float = 1.0, bucket: bool = True
+) -> int:
+    """Host-side dynamic adjustment of ``d`` (Formula 13), bucketed to powers
+    of two to bound XLA recompilations."""
+    d = min(int(math.ceil(alpha * d_r + beta)), k)
+    d = max(d, 1)
+    if bucket:
+        d = 1 << (d - 1).bit_length()   # next power of two
+        d = min(d, k)
+    return d
+
+
+def payload_scalars(payload: Payload, *, l: int, m: int, k: int, bytes_per_el: int = 4):
+    """Paper Formula 14: actual uplink scalars for this payload.
+
+    init round: full basis (k*l) + coefficients (k*m)
+    update round: coefficients (k*m) + d_r basis vectors (d_r*l) + d_r indices
+    """
+    init_cost = k * l + k * m
+    upd_cost = k * m + payload.d_r * l + payload.d_r
+    scalars = jnp.where(payload.init, init_cost, upd_cost)
+    return scalars * bytes_per_el

@@ -1,0 +1,72 @@
+"""Communication accounting -- exact uplink/downlink byte bookkeeping.
+
+The paper's headline numbers (Table III) are uplink GB at a target accuracy
+and total uplink GB.  This module provides a tiny ledger used by the FL
+runtime and the benchmarks so every method is charged identically:
+
+  * payload scalars are converted at ``bytes_per_scalar`` (4 for fp32 wire
+    format, 2 for bf16) -- sub-word codes (quantization, signs) report
+    fractional scalars;
+  * per-round, per-client, per-layer-group resolution;
+  * uplink  = client -> server (gradient direction);
+    downlink = server -> client (model broadcast), counted once per round as
+    the full model unless downlink compression is enabled.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+__all__ = ["CommLedger", "bytes_h"]
+
+
+def bytes_h(b: float) -> str:
+    """Human-readable bytes."""
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024.0 or unit == "TB":
+            return f"{b:.3f} {unit}"
+        b /= 1024.0
+    return f"{b:.3f} TB"
+
+
+@dataclass
+class CommLedger:
+    bytes_per_scalar: float = 4.0
+    uplink_total: float = 0.0
+    downlink_total: float = 0.0
+    per_round_uplink: List[float] = field(default_factory=list)
+    per_group: Dict[str, float] = field(default_factory=dict)
+
+    def begin_round(self) -> None:
+        self.per_round_uplink.append(0.0)
+
+    def charge_uplink(self, scalars: float, group: str = "_") -> None:
+        b = float(scalars) * self.bytes_per_scalar
+        self.uplink_total += b
+        if self.per_round_uplink:
+            self.per_round_uplink[-1] += b
+        self.per_group[group] = self.per_group.get(group, 0.0) + b
+
+    def charge_downlink(self, scalars: float) -> None:
+        self.downlink_total += float(scalars) * self.bytes_per_scalar
+
+    @property
+    def rounds(self) -> int:
+        return len(self.per_round_uplink)
+
+    def uplink_at(self, round_idx: int) -> float:
+        """Cumulative uplink bytes through round ``round_idx`` (inclusive)."""
+        return sum(self.per_round_uplink[: round_idx + 1])
+
+    def summary(self) -> str:
+        lines = [
+            f"uplink total   : {bytes_h(self.uplink_total)}",
+            f"downlink total : {bytes_h(self.downlink_total)}",
+            f"rounds         : {self.rounds}",
+        ]
+        if self.per_group:
+            lines.append("per-group uplink:")
+            for g, b in sorted(self.per_group.items(), key=lambda kv: -kv[1]):
+                lines.append(f"  {g:40s} {bytes_h(b)}")
+        return "\n".join(lines)

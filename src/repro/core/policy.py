@@ -1,0 +1,140 @@
+"""Per-layer compression policy: which layers to compress and with what (k, l).
+
+The paper (Sec. I / V-A.b) compresses only *parameter-dominant* layers --
+layers holding the large majority of model parameters (99.0% for LeNet5,
+92.3% for ResNet18, 98.7% for AlexNet in the paper's setups) -- because
+temporal correlation is empirically strongest there, and because the smaller
+remaining layers contribute negligible uplink anyway.
+
+For the assigned transformer-family architectures the parameter-dominant
+layers are the per-layer projection matrices (attention qkv/o, FFN in/out,
+MoE expert banks); embeddings / norms / biases / routers stay uncompressed.
+
+(k, l) follow the paper's rule: ``l ~= sqrt(n)`` aligned with structural
+boundaries, ``k << l`` chosen per layer group.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Tuple
+
+import numpy as np
+
+from .reshaping import choose_segment_length
+
+__all__ = ["LayerPlan", "CompressionPolicy", "make_policy", "coverage"]
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Compression plan for one (stacked) parameter group."""
+
+    name: str
+    shape: Tuple[int, ...]       # per-layer tensor shape (without stack axis)
+    stack: int                   # number of stacked layers sharing this plan
+    l: int                       # segment length (rows of G)
+    m: int                       # columns of G
+    k: int                       # retained basis vectors
+    compress: bool               # False -> transmitted raw
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def raw_scalars(self) -> int:
+        return self.n * self.stack
+
+    def update_scalars(self, d_r: int) -> int:
+        """Formula 14 per stacked layer."""
+        return (self.k * self.m + d_r * self.l + d_r) * self.stack
+
+    @property
+    def init_scalars(self) -> int:
+        return (self.k * self.l + self.k * self.m) * self.stack
+
+
+@dataclass
+class CompressionPolicy:
+    plans: Dict[str, LayerPlan] = field(default_factory=dict)
+    min_params_to_compress: int = 65536   # tiny tensors ship raw
+    coverage_target: float = 0.90        # parameter-dominant threshold
+
+    def plan_for(self, name: str) -> LayerPlan | None:
+        return self.plans.get(name)
+
+
+def _default_k(n: int, l: int) -> int:
+    """k << l, scaled gently with matrix size (paper uses 4..48 across layers
+    of 0.26MB..218MB models, and k=32 for all ResNet18 layers)."""
+    m = n // l
+    k = max(4, min(l // 8, m // 4, 64))
+    # round down to a power of two for MXU-friendly tile sizes
+    return 1 << (k.bit_length() - 1) if k & (k - 1) else k
+
+
+#: Name fragments never compressed: embeddings (row-sparse gradients defeat
+#: low-rank structure), norms/biases/scales (tiny), MoE routers (tiny but
+#: convergence-critical -- see DESIGN.md Sec. 4).
+DEFAULT_EXCLUDE = ("embed", "norm", "bias", "router", "scale", "ln_", "head")
+
+
+def make_policy(
+    param_shapes: Mapping[str, Tuple[Tuple[int, ...], int]],
+    overrides: Mapping[str, Tuple[int, int]] | None = None,
+    coverage_target: float = 0.90,
+    min_params: int = 65536,
+    exclude: Tuple[str, ...] = DEFAULT_EXCLUDE,
+) -> CompressionPolicy:
+    """Build a policy from ``{group_name: (per_layer_shape, stack)}``.
+
+    Groups are sorted by total parameter count; the largest groups are marked
+    for compression until ``coverage_target`` of all parameters is covered
+    (the paper's parameter-dominant selection), subject to ``min_params`` and
+    the ``exclude`` name fragments.  ``overrides`` maps group name -> (k, l).
+    """
+    overrides = dict(overrides or {})
+    totals = {
+        name: int(np.prod(shape)) * stack
+        for name, (shape, stack) in param_shapes.items()
+    }
+    grand = sum(totals.values()) or 1
+    order = sorted(totals, key=totals.get, reverse=True)
+
+    plans: Dict[str, LayerPlan] = {}
+    covered = 0
+    for name in order:
+        shape, stack = param_shapes[name]
+        n = int(np.prod(shape))
+        excluded = any(frag in name.lower() for frag in exclude)
+        want = (
+            covered / grand < coverage_target
+            and n >= min_params
+            and len(shape) >= 2
+            and not excluded
+        )
+        if name in overrides:
+            k, l = overrides[name]
+            want = True
+        elif want:
+            l = choose_segment_length(shape)
+            k = _default_k(n, l)
+        else:
+            l, k = max(1, int(shape[-1])) if n % max(1, int(shape[-1])) == 0 else 1, 0
+        if want:
+            covered += totals[name]
+        plans[name] = LayerPlan(
+            name=name, shape=tuple(int(s) for s in shape), stack=stack,
+            l=l, m=n // l, k=k, compress=bool(want),
+        )
+    return CompressionPolicy(plans=plans, coverage_target=coverage_target,
+                             min_params_to_compress=min_params)
+
+
+def coverage(policy: CompressionPolicy) -> float:
+    """Fraction of parameters covered by compressed groups."""
+    tot = sum(p.raw_scalars for p in policy.plans.values()) or 1
+    cov = sum(p.raw_scalars for p in policy.plans.values() if p.compress)
+    return cov / tot

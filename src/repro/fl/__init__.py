@@ -1,0 +1,13 @@
+"""repro.fl -- federated-learning runtime.
+
+  * compression -- uplink methods over model-update pytrees (GradESTC + baselines)
+  * simulation  -- benchmark-scale round loop with exact byte accounting
+
+The production SPMD round step (clients = mesh data-axis groups, compressed
+all-gather aggregation) lives in ``repro.launch``.
+"""
+
+from .compression import make_method
+from .simulation import FLConfig, FLResult, default_tiny_arch, run_fl
+
+__all__ = ["make_method", "FLConfig", "FLResult", "default_tiny_arch", "run_fl"]

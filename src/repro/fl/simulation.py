@@ -1,0 +1,235 @@
+"""Federated-learning round loop (benchmark-scale, single host).
+
+Implements the paper's experimental protocol (Sec. V): N clients, all (or a
+sampled fraction) participating per round, each performing ``local_steps``
+SGD steps before uploading its model delta through the configured uplink
+compression method; the server averages reconstructed deltas and applies
+them with a server learning rate (1.0 = FedAvg).
+
+The distributed SPMD path (pjit over the production mesh) lives in
+``repro/launch`` -- this module is the algorithm-fidelity / communication-
+accounting harness used by tests, benchmarks, and the examples.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import CommLedger
+from repro.core.policy import CompressionPolicy, make_policy
+from repro.data import client_batch_stream, make_task
+from repro.models import count_params, loss_fn, model, param_group_shapes
+from repro.models.config import ArchConfig
+from repro.optim import sgd
+
+from .compression import make_method
+
+__all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch"]
+
+
+def default_tiny_arch(vocab: int = 256) -> ArchConfig:
+    """Small-but-real transformer for CPU-scale FL experiments (~1.6M params,
+    the LeNet5-of-this-codebase)."""
+    return ArchConfig(
+        name="fl-tiny", family="dense", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=4, d_ff=512, vocab=vocab, dtype="float32", remat=False,
+        attn_chunk=0,
+    )
+
+
+@dataclass
+class FLConfig:
+    method: str = "gradestc"
+    rounds: int = 30
+    n_clients: int = 10
+    participation: float = 1.0       # fraction of clients per round
+    local_steps: int = 4
+    batch: int = 16
+    seq: int = 64
+    lr: float = 0.05
+    server_lr: float = 1.0
+    alpha: Optional[float] = None    # None = IID; 0.5 / 0.1 = paper's non-IID
+    #: compress the server->client broadcast through a shared server-side
+    #: GradESTC codec (the paper's Sec. VI future work; beyond-paper).
+    downlink_compress: bool = False
+    seed: int = 0
+    eval_every: int = 5
+    eval_batches: int = 4
+    arch: Optional[ArchConfig] = None
+    method_kw: Dict[str, Any] = field(default_factory=dict)
+    policy_overrides: Dict[str, tuple] = field(default_factory=dict)
+    coverage_target: float = 0.90
+    min_params: int = 4096           # tiny model -> lower floor than prod
+
+
+@dataclass
+class FLResult:
+    eval_rounds: List[int]
+    eval_loss: List[float]
+    eval_acc: List[float]
+    uplink_bytes: List[float]        # cumulative at each eval point
+    ledger: CommLedger
+    wall_s: float
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    def uplink_at_loss(self, target: float) -> Optional[float]:
+        """Cumulative uplink bytes when eval loss first reaches target."""
+        for r, l, b in zip(self.eval_rounds, self.eval_loss, self.uplink_bytes):
+            if l <= target:
+                return b
+        return None
+
+    def uplink_at_acc(self, target: float) -> Optional[float]:
+        for r, a, b in zip(self.eval_rounds, self.eval_acc, self.uplink_bytes):
+            if a >= target:
+                return b
+        return None
+
+
+def _flatten_groups(params, groups) -> Dict[str, jnp.ndarray]:
+    """{group_path: array} view of the param pytree."""
+    out = {}
+    for path in groups:
+        node = params
+        for part in path.split("/"):
+            node = node[part]
+        out[path] = node
+    return out
+
+
+def _set_groups(params, updates: Dict[str, jnp.ndarray]):
+    import copy
+    new = jax.tree.map(lambda x: x, params)   # shallow-copy containers
+
+    def setpath(tree, parts, val):
+        if len(parts) == 1:
+            tree = dict(tree)
+            tree[parts[0]] = val
+            return tree
+        tree = dict(tree)
+        tree[parts[0]] = setpath(tree[parts[0]], parts[1:], val)
+        return tree
+
+    for path, val in updates.items():
+        new = setpath(new, path.split("/"), val)
+    return new
+
+
+def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
+    t0 = time.time()
+    arch = cfg.arch or default_tiny_arch()
+    task = make_task(vocab=arch.vocab, n_clients=cfg.n_clients, alpha=cfg.alpha,
+                     seed=cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = model.init_params(arch, key)
+
+    groups = param_group_shapes(arch)
+    policy = make_policy(groups, overrides=cfg.policy_overrides,
+                         coverage_target=cfg.coverage_target,
+                         min_params=cfg.min_params)
+    method = make_method(cfg.method, policy=policy, seed=cfg.seed, **cfg.method_kw)
+    downlink_codec = (
+        make_method("gradestc", policy=policy, seed=cfg.seed + 101)
+        if cfg.downlink_compress else None
+    )
+
+    opt_init, opt_update = sgd(cfg.lr)
+
+    @jax.jit
+    def local_train(p, batches):
+        """scan ``local_steps`` SGD steps; batches: {k: (steps, B, S)}."""
+        st = opt_init(p)
+
+        def step(carry, b):
+            p, st = carry
+            g = jax.grad(lambda pp: loss_fn(arch, pp, b))(p)
+            p, st = opt_update(g, st, p)
+            return (p, st), None
+
+        (p2, _), _ = jax.lax.scan(step, (p, st), batches)
+        return p2
+
+    @jax.jit
+    def eval_step(p, batch):
+        logits = model.forward(arch, p, batch)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+        return jnp.mean(logz - gold), acc
+
+    streams = {c: client_batch_stream(task, c, cfg.batch, cfg.seq, cfg.seed)
+               for c in range(cfg.n_clients)}
+    eval_stream = client_batch_stream(task, -1, cfg.batch, cfg.seq, cfg.seed + 999)
+    eval_batches = [next(eval_stream) for _ in range(cfg.eval_batches)]
+
+    ledger = CommLedger()
+    rng = np.random.default_rng(cfg.seed)
+    group_paths = list(groups.keys())
+    n_sel = max(1, int(round(cfg.participation * cfg.n_clients)))
+
+    res = FLResult([], [], [], [], ledger, 0.0)
+
+    for rnd in range(cfg.rounds):
+        ledger.begin_round()
+        sel = sorted(rng.choice(cfg.n_clients, size=n_sel, replace=False))
+        acc_deltas: Optional[Dict[str, jnp.ndarray]] = None
+        for c in sel:
+            bs = [next(streams[c]) for _ in range(cfg.local_steps)]
+            batches = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+            local = local_train(params, batches)
+            delta = {
+                p: l - g for p, l, g in zip(
+                    group_paths,
+                    _flatten_groups(local, group_paths).values(),
+                    _flatten_groups(params, group_paths).values(),
+                )
+            }
+            key, sub = jax.random.split(key)
+            recon, scalars = method.round_payload(c, delta, sub, rnd)
+            ledger.charge_uplink(scalars, group=f"round{rnd}")
+            if acc_deltas is None:
+                acc_deltas = recon
+            else:
+                acc_deltas = {p: a + recon[p] for p, a in acc_deltas.items()}
+        if hasattr(method, "end_round"):
+            method.end_round()
+        avg = {p: (v / n_sel) * cfg.server_lr for p, v in acc_deltas.items()}
+        if downlink_codec is not None:
+            # server compresses the aggregated update once; every client
+            # mirrors the shared decompressor, so the server applies the
+            # *reconstruction* to stay bit-identical with clients.
+            key, sub = jax.random.split(key)
+            avg, dl_scalars = downlink_codec.round_payload(-1, avg, sub, rnd)
+            ledger.charge_downlink(float(dl_scalars) * n_sel)
+        else:
+            ledger.charge_downlink(
+                sum(v.size for v in _flatten_groups(params, group_paths).values())
+                * n_sel)
+        flat = _flatten_groups(params, group_paths)
+        params = _set_groups(params, {p: flat[p] + avg[p].astype(flat[p].dtype)
+                                      for p in group_paths})
+
+        if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+            ls, accs = zip(*[eval_step(params, b) for b in eval_batches])
+            res.eval_rounds.append(rnd)
+            res.eval_loss.append(float(np.mean([float(l) for l in ls])))
+            res.eval_acc.append(float(np.mean([float(a) for a in accs])))
+            res.uplink_bytes.append(ledger.uplink_total)
+            if progress:
+                progress(rnd, {
+                    "loss": res.eval_loss[-1], "acc": res.eval_acc[-1],
+                    "uplink": ledger.uplink_total,
+                })
+
+    res.wall_s = time.time() - t0
+    if hasattr(method, "sum_d"):
+        res.extra["sum_d"] = method.sum_d
+    return res

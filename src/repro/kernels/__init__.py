@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for GradESTC hot spots.
+
+  * gradestc_encode -- fused A = M^T G, E = G - M A  (compression hot path)
+  * gradestc_decode -- blocked Ghat = M A            (server reconstruction)
+  * quant           -- block-wise stochastic int8     (FedPAQ baseline, TPU-native)
+  * flash_attention -- fused causal/window/GQA attention (SPerf, prefill)
+  * ops             -- jit'd public wrappers (padding, block-size choice, dispatch)
+  * ref             -- pure-jnp oracles
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with interpret=True.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .gradestc_decode import decode_pallas
+from .gradestc_encode import encode_pallas
+from .quant import block_dequant_pallas, block_quant_pallas
+
+__all__ = [
+    "ops", "ref",
+    "encode_pallas", "decode_pallas",
+    "block_quant_pallas", "block_dequant_pallas",
+    "flash_attention_pallas",
+]

@@ -1,0 +1,137 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: block-shape selection against a VMEM budget, padding to tile
+multiples, and backend dispatch -- on TPU the kernels run compiled; elsewhere
+(this CPU container) they run in interpret mode or fall through to the
+pure-jnp reference (configurable), so the rest of the framework can call one
+API unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gradestc_decode import decode_pallas
+from .gradestc_encode import encode_pallas
+from .quant import block_dequant_pallas, block_quant_pallas
+
+__all__ = [
+    "encode", "decode", "block_quantize", "block_dequantize",
+    "choose_block_m", "VMEM_BUDGET_BYTES",
+]
+
+# v5e VMEM is ~128 MiB/core architecturally but ~16 MiB is the practical
+# working budget per pallas_call after double buffering; stay under that.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def choose_block_m(l: int, k: int, dtype=jnp.float32, budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest 128-multiple bm such that M + G-block + E-block + A-block fit.
+
+    VMEM model (bytes): l*k*s  +  2*l*bm*s  +  k*bm*s,  s = dtype size.
+    Returns 0 when even bm=128 cannot fit (l too large for the single-pass
+    kernel; ops.encode then falls back to the XLA path, which tiles l
+    internally at the cost of reading G twice)."""
+    s = jnp.dtype(dtype).itemsize
+    fixed = l * k * s
+    per_col = (2 * l + k) * s
+    bm = (budget - fixed) // per_col
+    bm = (bm // 128) * 128
+    if bm < 128:
+        return 0
+    return int(min(bm, 1024))
+
+
+def _pad_cols(G: jnp.ndarray, mult: int) -> Tuple[jnp.ndarray, int]:
+    m = G.shape[-1]
+    pad = (-m) % mult
+    if pad:
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+    return G, pad
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def encode(
+    M: jnp.ndarray, G: jnp.ndarray, *, use_kernel: bool = True, interpret: bool | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused A = M^T G, E = G - M A (see gradestc_encode.py)."""
+    if not use_kernel:
+        return ref.encode_ref(M, G)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    l, k = M.shape
+    bm = choose_block_m(l, k, G.dtype)
+    if bm == 0:
+        return ref.encode_ref(M, G)   # l too large for single-pass VMEM
+    Gp, pad = _pad_cols(G, bm)
+    A, E = encode_pallas(M, Gp, block_m=bm, interpret=interp)
+    if pad:
+        A, E = A[:, : G.shape[1]], E[:, : G.shape[1]]
+    return A, E
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def decode(
+    M: jnp.ndarray, A: jnp.ndarray, *, use_kernel: bool = True, interpret: bool | None = None
+) -> jnp.ndarray:
+    """Ghat = M @ A (see gradestc_decode.py)."""
+    if not use_kernel:
+        return ref.decode_ref(M, A)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    l, k = M.shape
+    m = A.shape[1]
+    bl = 256 if l % 256 == 0 else (128 if l % 128 == 0 else l)
+    Ap, pad = _pad_cols(A, 256)
+    out = decode_pallas(M, Ap, block_l=bl, block_m=256, interpret=interp)
+    return out[:, :m] if pad else out
+
+
+def block_quantize(
+    g: jnp.ndarray, key: jax.Array, *, block: int = 512, bits: int = 8,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Flat stochastic int8 quantization.  Returns (codes, scales, pad)."""
+    n = g.shape[0]
+    pad = (-n) % block
+    gp = jnp.pad(g, (0, pad)) if pad else g
+    u = jax.random.uniform(key, gp.shape, jnp.float32)
+    if not use_kernel:
+        codes, scales = ref.block_quant_ref(gp, u, block, bits)
+        return codes, scales, pad
+    interp = (not _on_tpu()) if interpret is None else interpret
+    rows = gp.shape[0] // block
+    br = rows if rows < 256 else 256
+    while rows % br:
+        br -= 1
+    codes, scales = block_quant_pallas(
+        gp, u, block=block, bits=bits, block_rows=br, interpret=interp
+    )
+    return codes, scales, pad
+
+
+def block_dequantize(
+    codes: jnp.ndarray, scales: jnp.ndarray, pad: int, *, block: int = 512,
+    bits: int = 8, use_kernel: bool = True, interpret: bool | None = None,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    if not use_kernel:
+        out = ref.block_dequant_ref(codes, scales, block, bits)
+    else:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        rows = codes.shape[0] // block
+        br = rows if rows < 256 else 256
+        while rows % br:
+            br -= 1
+        out = block_dequant_pallas(
+            codes, scales, block=block, bits=bits, block_rows=br,
+            interpret=interp, out_dtype=out_dtype,
+        )
+    return out[: codes.shape[0] - pad] if pad else out

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics the kernels must match (asserted across a
+shape/dtype sweep in tests/test_kernels.py, kernels run with interpret=True
+on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["encode_ref", "decode_ref", "block_quant_ref", "block_dequant_ref"]
+
+
+def encode_ref(M: jnp.ndarray, G: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused GradESTC projection: A = M^T G, E = G - M A.
+
+    M: (l, k) orthonormal basis.  G: (l, m).  Returns (A (k, m), E (l, m)).
+    Accumulation in f32 regardless of input dtype (MXU-accurate semantics).
+    """
+    M32 = M.astype(jnp.float32)
+    G32 = G.astype(jnp.float32)
+    A = M32.T @ G32
+    E = G32 - M32 @ A
+    return A.astype(G.dtype), E.astype(G.dtype)
+
+
+def decode_ref(M: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """GradESTC reconstruction: Ghat = M A.  M: (l, k), A: (k, m)."""
+    out = M.astype(jnp.float32) @ A.astype(jnp.float32)
+    return out.astype(M.dtype)
+
+
+def block_quant_ref(
+    g: jnp.ndarray, uniforms: jnp.ndarray, block: int, bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-wise stochastic uniform quantization (TPU-native FedPAQ variant).
+
+    g: (n,) with n % block == 0.  uniforms: (n,) iid U[0,1) used for the
+    stochastic rounding.  Each length-``block`` slice gets its own max-abs
+    scale (better accuracy than one global scale, and each tile's scale is
+    computable inside one VMEM-resident block -- the TPU adaptation).
+
+    Returns (codes int8 in [-(2^(bits-1)-1), 2^(bits-1)-1], scales (n/block,)).
+    """
+    levels = (1 << (bits - 1)) - 1     # symmetric signed code book
+    gb = g.reshape(-1, block).astype(jnp.float32)
+    ub = uniforms.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gb), axis=1, keepdims=True), 1e-12)
+    x = gb / scale * levels            # [-levels, levels]
+    lo = jnp.floor(x)
+    codes = lo + (ub < (x - lo)).astype(jnp.float32)
+    codes = jnp.clip(codes, -levels, levels)
+    return codes.astype(jnp.int8).reshape(g.shape), scale[:, 0]
+
+
+def block_dequant_ref(
+    codes: jnp.ndarray, scales: jnp.ndarray, block: int, bits: int = 8
+) -> jnp.ndarray:
+    levels = (1 << (bits - 1)) - 1
+    cb = codes.reshape(-1, block).astype(jnp.float32)
+    return (cb * (scales[:, None] / levels)).reshape(codes.shape)

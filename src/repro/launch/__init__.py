@@ -1,0 +1,12 @@
+"""repro.launch -- production mesh, sharding policy, dry-run, drivers.
+
+NOTE: importing ``repro.launch.dryrun`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` and must happen
+before any other jax initialization; never import it from library code.
+The other modules are safe to import anywhere.
+"""
+
+from .mesh import HW, make_local_mesh, make_production_mesh
+from .sharding import MeshPlan, make_plan
+
+__all__ = ["HW", "make_local_mesh", "make_production_mesh", "MeshPlan", "make_plan"]

@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Aggregation-collective comparison: FedAvg vs GradESTC (the paper's
+uplink, isolated).
+
+The full train-step collective totals are dominated by tensor-parallel
+activation all-reduces (identical for both methods).  The FL uplink analog
+on the pod is specifically the *cross-client aggregation* collective:
+  FedAvg   : all-reduce of the full f32 deltas over the client axis
+  GradESTC : all-gather of {A (k x m), new basis vectors (d x l)} payloads
+             + shard-local reconstruction
+This script lowers both aggregation steps alone at production shapes and
+shardings and records their collective bytes -- the datacenter rendering of
+the paper's Table III bytes.
+
+Usage: python -m repro.launch.agg_compare [--arch gemma3-1b]
+"""
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import arch_names, get_config, get_shape
+from repro.core import gradestc as ge
+
+from .dryrun import _cost_dict, collective_bytes
+from .mesh import HW, make_production_mesh
+from .sharding import make_plan
+from .steps import GEState, _delta_to_G, compression_policy_for, ge_state_specs, make_ge_state
+
+
+def compare(arch: str, d_static: int = 16):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    plan = make_plan(mesh, cfg)
+    C = plan.n_clients
+    policy = compression_policy_for(cfg, plan)
+    comp = {p: lp for p, lp in policy.plans.items() if lp.compress}
+
+    cl = plan.client_axes
+    cspec = cl if len(cl) > 1 else (cl[0] if cl else None)
+
+    delta_shapes = {}
+    d_specs = {}
+    for p, lp in comp.items():
+        shp = (C, lp.stack) + lp.shape
+        delta_shapes[p] = jax.ShapeDtypeStruct(shp, jnp.float32)
+        d_specs[p] = NamedSharding(mesh, P(cspec, *([None] * (len(shp) - 1))))
+
+    def fedavg_agg(deltas):
+        return {p: jnp.mean(v, axis=0) for p, v in deltas.items()}
+
+    def gradestc_agg(ge_state, deltas):
+        out = {}
+        for p, lp in comp.items():
+            G = _delta_to_G(deltas[p], lp)
+            def one(Mi, key, Gi):
+                st = ge.CompressorState(M=Mi, key=key,
+                                        initialized=jnp.ones((), jnp.bool_))
+                st2, payload, _ = ge.compress_update(st, Gi, k=lp.k, d=d_static)
+                return st2.M, payload.coeffs
+            M2, A = jax.vmap(jax.vmap(one))(ge_state.M[p], ge_state.keys[p], G)
+            out[p] = jnp.einsum("cxlk,cxkm->xlm", M2, A) / C
+        return out
+
+    ge_shape = jax.eval_shape(functools.partial(make_ge_state, cfg, policy, C))
+    g_specs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           ge_state_specs(plan, policy),
+                           is_leaf=lambda x: isinstance(x, P))
+
+    rec = {"arch": arch, "n_clients": C}
+    for name, fn, args, shardings in (
+        ("fedavg", fedavg_agg, (delta_shapes,), (d_specs,)),
+        ("gradestc", gradestc_agg, (ge_shape, delta_shapes), (g_specs, d_specs)),
+    ):
+        cc = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+        coll = collective_bytes(cc.as_text())
+        total = sum(coll.values())
+        rec[name] = {
+            "collective_bytes_per_device": total,
+            "collective_s": total / HW.ICI_BW,
+            "breakdown": coll,
+            "flops": _cost_dict(cc).get("flops", 0.0),
+        }
+    rec["ratio"] = (
+        rec["gradestc"]["collective_bytes_per_device"]
+        / max(rec["fedavg"]["collective_bytes_per_device"], 1.0)
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--report", default="reports/agg_compare.json")
+    args = ap.parse_args(argv)
+    archs = [args.arch] if args.arch else [
+        a for a in arch_names()
+        if a not in ("dbrx-132b", "qwen2-vl-72b", "yi-34b")  # C=1 single-pod
+    ]
+    out = []
+    for a in archs:
+        try:
+            rec = compare(a)
+        except Exception as e:  # noqa
+            rec = {"arch": a, "error": f"{type(e).__name__}: {e}"}
+        out.append(rec)
+        if "error" in rec:
+            print(f"{a:24s} ERROR {rec['error'][:120]}", flush=True)
+        else:
+            f, g = rec["fedavg"], rec["gradestc"]
+            print(f"{a:24s} fedavg={f['collective_bytes_per_device']/2**20:9.1f}MiB "
+                  f"({f['collective_s']*1e3:7.1f}ms)  "
+                  f"gradestc={g['collective_bytes_per_device']/2**20:9.1f}MiB "
+                  f"({g['collective_s']*1e3:7.1f}ms)  ratio={rec['ratio']:.4f}",
+                  flush=True)
+    os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+    with open(args.report, "w") as fjson:
+        json.dump(out, fjson, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

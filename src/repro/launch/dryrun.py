@@ -1,0 +1,522 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination on placeholder devices and extract the roofline terms.
+
+The two lines above MUST stay the first statements of this module (before
+any jax import): jax locks the device count at first initialization.
+
+Per (arch, shape, mesh) this produces:
+  * PROOF   -- the true-depth, scan-compact, sharded program compiles;
+              memory_analysis() shows the per-device footprint.
+  * COST    -- flops / bytes / per-collective bytes, extracted from two
+              reduced-depth *unrolled* lowerings with identical shardings
+              and linearly extrapolated to the true depth:
+                  per_layer = (cost(2p) - cost(p)) / p
+                  total     = cost(p) + per_layer * (L - p)
+              (lax.scan bodies are counted once by cost_analysis -- verified
+              in this container -- so the cost lowerings unroll; the proof
+              lowering keeps the scan.  DESIGN.md Sec. 6.)
+  * ROOFLINE -- compute / memory / collective seconds on the v5e model
+              (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip).
+
+Results append to a JSON report consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--method gradestc]
+  python -m repro.launch.dryrun --all --proof-only      # fast shardability pass
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import arch_names, get_config, get_shape, is_skipped
+from repro.models import model, param_group_shapes
+from repro.models.config import ArchConfig, InputShape
+
+from .mesh import HW, make_production_mesh
+from .sharding import (
+    MeshPlan, batch_specs, cache_specs, make_plan, param_specs,
+    client_stacked_specs, axis_size,
+)
+from .steps import (
+    GEState, compression_policy_for, ge_state_specs, make_fl_round_step,
+    make_ge_state, make_serve_steps, serve_input_specs, train_input_specs,
+)
+
+__all__ = ["dryrun_pair", "main"]
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+# --------------------------------------------------------------------------
+# HLO parsing
+# --------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _dtype_bytes(name: str) -> int:
+    return {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+        "f8e4m3fn": 1, "f8e5m2": 1,
+    }.get(name, 4)
+
+
+def _first_shape_bytes(sig: str) -> int:
+    """Sum the sizes of all array shapes in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _dtype_bytes(dt)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO.
+
+    These are *global* bytes (the named shapes are per-device outputs times
+    they appear once per device program -- we report per-device bytes, which
+    is what the ICI roofline term wants)."""
+    out: Dict[str, float] = Counter()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2).split(".")[0]
+        if op in _COLLECTIVES:
+            out[op] += _first_shape_bytes(m.group(1))
+    return dict(out)
+
+
+_CONVERT_DEF_RE = re.compile(
+    r"%wrapped_convert[\w.]*\s*\(param[\w.]*:\s*bf16\[([0-9,]+)\]\)\s*->\s*f32\[\1\]"
+)
+
+
+def cpu_f32_artifact_bytes(hlo_text: str, floor: int = 1 << 26) -> int:
+    """Bytes of whole-tensor bf16->f32 converts the CPU backend inserts to
+    legalize bf16 dots (hoisted out of layer scans as persistent f32 copies
+    of weight stacks / KV caches).  A TPU build computes these dots natively
+    in mixed precision, so the proof lowering's memory_analysis over-counts
+    by roughly this amount; reported separately (DESIGN.md Sec. 6)."""
+    total = 0
+    for m in _CONVERT_DEF_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        if n * 4 >= floor:
+            total += n * 4
+    return total
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+# --------------------------------------------------------------------------
+# per-pair lowering
+# --------------------------------------------------------------------------
+
+def _reduced_depth(cfg: ArchConfig) -> int:
+    """Smallest faithful depth: one full layer pattern (>= 1)."""
+    return max(len(cfg.pattern), 1)
+
+
+def _with_depth(cfg: ArchConfig, L: int, *, unroll: bool, cost_mode: bool) -> ArchConfig:
+    kw: Dict[str, Any] = dict(n_layers=L, scan_unroll=L if unroll else 1)
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = L
+    if cost_mode:
+        # unroll the inner chunk scans (flash-pattern attention, chunked CE)
+        # so cost_analysis counts every chunk; the memory access pattern and
+        # remat recompute stay exactly as production.
+        kw["attn_unroll"] = True
+    return dataclasses.replace(cfg, **kw)
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _named_tree(mesh, spec_tree, shape_tree):
+    return jax.tree.map(
+        lambda s, _: NamedSharding(mesh, s),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _auto_grad_accum(cfg: ArchConfig, shape: InputShape, plan: MeshPlan,
+                     budget: float = 2e9) -> int:
+    """Microbatch count bounding per-device activation-checkpoint memory
+    (~ n_layers x tokens_per_device x d_model x 2B per microbatch)."""
+    C = plan.n_clients
+    B_c = max(shape.global_batch // C, 1)
+    inner = 1
+    for a in plan.inner_batch_axes:
+        inner *= axis_size(plan.mesh, a)
+    tokens_dev = B_c * shape.seq_len / max(inner, 1)
+    save_bytes = cfg.n_layers * tokens_dev * cfg.d_model * 2
+    ga = 1
+    while save_bytes / ga > budget and ga < B_c:
+        ga *= 2
+    while B_c % ga:
+        ga //= 2
+    return max(ga, 1)
+
+
+def _lower_train(cfg: ArchConfig, shape: InputShape, mesh, plan: MeshPlan,
+                 method: str, d_static: int = 16, grad_accum: int | None = None):
+    policy = compression_policy_for(cfg, plan)
+    if grad_accum is None:
+        ga = cfg.grad_accum_override or _auto_grad_accum(cfg, shape, plan)
+    else:
+        ga = grad_accum
+    step = make_fl_round_step(cfg, mesh, plan, policy, method=method,
+                              d_static=d_static, grad_accum=ga)
+    params_shape = jax.eval_shape(
+        functools.partial(model.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    ge_shape = jax.eval_shape(
+        functools.partial(make_ge_state, cfg, policy, plan.n_clients)
+    )
+    batch_shapes = train_input_specs(cfg, shape, plan)
+
+    p_specs = param_specs(plan, params_shape)
+    g_specs = ge_state_specs(plan, policy)
+    b_specs = batch_specs(plan, batch_shapes, client_axis=True)
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), g_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        {k: NamedSharding(mesh, s) for k, s in b_specs.items()},
+    )
+    out_shardings = (
+        in_shardings[0], in_shardings[1],
+        jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                     jax.eval_shape(step, params_shape, ge_shape, batch_shapes)[2]),
+    )
+    jitted = jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings)
+    return jitted.lower(params_shape, ge_shape, batch_shapes)
+
+
+def _lower_serve(cfg: ArchConfig, shape: InputShape, mesh, plan: MeshPlan):
+    if plan.huge and cfg.attn_chunk > 256:
+        # bound the per-chunk score buffer when attention heads cannot
+        # shard 16-way (e.g. yi-34b's 56 heads)
+        cfg = dataclasses.replace(cfg, attn_chunk=256)
+    prefill, decode = make_serve_steps(cfg)
+    params_shape = jax.eval_shape(
+        functools.partial(model.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    p_specs = param_specs(plan, params_shape, role="serve")
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        batch = serve_input_specs(cfg, shape, decode=False)
+        b_specs = batch_specs(plan, batch, client_axis=False)
+        b_shard = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+        jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return jitted.lower(params_shape, batch)
+
+    # decode
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, shape.global_batch, shape.seq_len)
+    )
+    c_specs = cache_specs(plan, cache_shape, shape.global_batch)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    tokens = serve_input_specs(cfg, shape, decode=True)
+    t_specs = batch_specs(plan, tokens, client_axis=False)
+    t_shard = {k: NamedSharding(mesh, s) for k, s in t_specs.items()}
+    # logits out-sharding left unconstrained: pinning it to P() would force
+    # a (B, V)-sized all-gather that a real server never pays (it samples on
+    # the sharded logits).
+    jitted = jax.jit(
+        decode,
+        in_shardings=(p_shard, c_shard, t_shard),
+        out_shardings=(None, c_shard),
+    )
+    return jitted.lower(params_shape, cache_shape, tokens)
+
+
+def _lower_for(cfg, shape, mesh, plan, method, grad_accum=None):
+    if shape.kind == "train":
+        return _lower_train(cfg, shape, mesh, plan, method,
+                            grad_accum=grad_accum)
+    return _lower_serve(cfg, shape, mesh, plan)
+
+
+def dryrun_pair(
+    arch: str, shape_name: str, *, multi_pod: bool = False,
+    method: str = "gradestc", proof_only: bool = False,
+    verbose: bool = True, cfg_overrides: Optional[Dict[str, Any]] = None,
+    tag: str = "",
+) -> Dict[str, Any]:
+    """Run the full dry-run for one (arch, shape, mesh); returns the record.
+
+    ``cfg_overrides``: dataclasses.replace kwargs applied to the arch config
+    -- the SPerf hillclimb switches (EXPERIMENTS.md)."""
+    t_start = time.time()
+    shape = get_shape(shape_name)
+    cfg0 = get_config(arch)
+    if cfg_overrides:
+        cfg0 = dataclasses.replace(cfg0, **cfg_overrides)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "method": method if shape.kind == "train" else "-",
+        "kind": shape.kind, "tag": tag,
+        "cfg_overrides": dict(cfg_overrides or {}),
+    }
+    skip = is_skipped(arch, shape_name)
+    if skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    plan = make_plan(mesh, cfg0)
+    rec["chips"] = chips
+    rec["tp_axes"] = list(plan.tp_axes)
+    rec["client_axes"] = list(plan.client_axes)
+    rec["n_clients"] = plan.n_clients
+    # grad-accum must be derived from the TRUE depth: the reduced-depth
+    # cost lowerings would otherwise compute ga=1 and miss the per-
+    # microbatch weight re-streaming entirely (EXPERIMENTS.md SPerf).
+    ga_true = None
+    if shape.kind == "train":
+        ga_true = cfg0.grad_accum_override or _auto_grad_accum(cfg0, shape, plan)
+        rec["grad_accum"] = ga_true
+
+    # ---- 1. PROOF: true depth, scanned, sharded -------------------------
+    t0 = time.time()
+    lowered = _lower_for(cfg0, shape, mesh, plan, method, grad_accum=ga_true)
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    proof_text = compiled.as_text()
+    artifact = cpu_f32_artifact_bytes(proof_text)
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+        # CPU-backend bf16-dot legalization copies (absent on TPU):
+        "cpu_f32_artifact_bytes": artifact,
+        "peak_bytes_tpu": int(
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes - artifact
+        ),
+    }
+    rec["fits_hbm"] = rec["memory"]["peak_bytes_tpu"] <= HW.HBM_BYTES
+    proof_coll = collective_bytes(proof_text)
+    rec["proof_collectives"] = proof_coll
+    rec["status"] = "ok"
+    if proof_only:
+        rec["wall_s"] = round(time.time() - t_start, 1)
+        return rec
+
+    # ---- 2. COST: reduced-depth unrolled lowerings ----------------------
+    p = _reduced_depth(cfg0)
+    costs = {}
+    colls = {}
+    # cap the unrolled grad-accum factor in the cost lowerings (compile-time
+    # bound); the residual (ga_true - ga_cost) microbatches re-stream the
+    # layer weights ~3x each (fwd + bwd + remat-fwd reads) -- added
+    # analytically below.
+    ga_cost = min(ga_true, 4) if ga_true else None
+    for mult in (1, 2):
+        L = p * mult
+        cfg_c = _with_depth(cfg0, L, unroll=True, cost_mode=True)
+        plan_c = make_plan(mesh, cfg_c)
+        lc = _lower_for(cfg_c, shape, mesh, plan_c, method, grad_accum=ga_cost)
+        cc = lc.compile()
+        costs[mult] = _cost_dict(cc)
+        colls[mult] = collective_bytes(cc.as_text())
+
+    L_true = cfg0.n_layers
+    def _extrap(key):
+        c1 = costs[1].get(key, 0.0)
+        c2 = costs[2].get(key, 0.0)
+        per_layer = max(c2 - c1, 0.0) / p
+        return c1 + per_layer * (L_true - p)
+
+    flops = _extrap("flops")
+    bytes_acc = _extrap("bytes accessed")
+    if ga_true and ga_cost and ga_true > ga_cost:
+        rec["ga_cost"] = ga_cost
+        extra_stream = (ga_true - ga_cost) * 3.0 * plan.param_bytes / chips
+        rec["ga_stream_correction_bytes"] = extra_stream
+        bytes_acc += extra_stream
+    coll_total = {}
+    for op in set(colls[1]) | set(colls[2]):
+        c1, c2 = colls[1].get(op, 0.0), colls[2].get(op, 0.0)
+        coll_total[op] = c1 + max(c2 - c1, 0.0) / p * (L_true - p)
+    coll_bytes = sum(coll_total.values())
+
+    # cost_analysis on an SPMD-partitioned module reports the *per-device*
+    # program (verified empirically: per-device flops x chips ~= analytic
+    # global flops), so the roofline terms divide by nothing further.
+    rec["hlo_flops_per_device"] = flops
+    rec["hlo_bytes_per_device"] = bytes_acc
+    rec["collective_bytes_per_device"] = coll_bytes
+    rec["collectives"] = coll_total
+
+    # ---- 3. ROOFLINE ------------------------------------------------------
+    compute_s = flops / HW.PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HW.HBM_BW
+    collective_s = coll_bytes / HW.ICI_BW
+    rec["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            ("compute", compute_s), ("memory", memory_s),
+            ("collective", collective_s), key=lambda kv: kv[1],
+        )[0],
+    }
+
+    # MODEL_FLOPS = 6 * N_active * tokens (train: x3 for fwd+bwd handled by
+    # the 6 factor; decode: 2 * N_active per token)
+    n_active = _active_params(cfg0)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+    rec["model_flops"] = model_flops
+    rec["useful_ratio"] = model_flops / (flops * chips) if flops else 0.0
+    rec["wall_s"] = round(time.time() - t_start, 1)
+    return rec
+
+
+def _active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (MoE counts top-k experts only)."""
+    total = 0.0
+    for name, (shape, stack) in param_group_shapes(cfg).items():
+        n = float(np.prod(shape)) * stack
+        if "moe_w" in name and cfg.n_experts:
+            n *= cfg.experts_per_tok / cfg.n_experts
+        if "embed" in name:       # lookup, not matmul
+            continue
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def _append_report(path: str, rec: Dict[str, Any]):
+    data = []
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data = [r for r in data if not (
+        r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+        and r["multi_pod"] == rec["multi_pod"] and r.get("method") == rec.get("method")
+    )]
+    data.append(rec)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--method", default="gradestc",
+                    choices=["gradestc", "fedavg"])
+    ap.add_argument("--proof-only", action="store_true")
+    ap.add_argument("--report", default="reports/dryrun.json")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        from repro.models.config import SHAPES
+        for a in arch_names():
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch} x {shape} ({'2pod' if args.multi_pod else '1pod'})"
+        try:
+            rec = dryrun_pair(arch, shape, multi_pod=args.multi_pod,
+                              method=args.method, proof_only=args.proof_only)
+        except Exception as e:  # noqa
+            rec = {
+                "arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                "method": args.method, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+            failures += 1
+        _append_report(args.report, rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            mem = rec["memory"]["peak_bytes_tpu"] / 2**30
+            extra = f"peak={mem:.2f}GiB fits={rec['fits_hbm']}"
+            if "roofline" in rec:
+                r = rec["roofline"]
+                extra += (f" compute={r['compute_s']*1e3:.1f}ms "
+                          f"mem={r['memory_s']*1e3:.1f}ms "
+                          f"coll={r['collective_s']*1e3:.1f}ms "
+                          f"-> {r['bottleneck']}")
+        elif status == "skipped":
+            extra = rec["skip_reason"]
+        else:
+            extra = rec["error"][:200]
+        print(f"[{status:7s}] {tag:48s} {extra}", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

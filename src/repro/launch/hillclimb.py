@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""SPerf hillclimb runner: apply one named optimization configuration to a
+(arch, shape) pair, re-lower, re-analyse, and append the record (with the
+hypothesis text) to reports/perf_iterations.json.
+
+Usage:
+  python -m repro.launch.hillclimb --arch granite-moe-1b-a400m \
+      --shape train_4k --step moe_sg
+  python -m repro.launch.hillclimb --list
+"""
+
+import argparse
+import json
+from typing import Any, Dict
+
+#: name -> (cfg overrides, hypothesis text)
+STEPS: Dict[str, Dict[str, Any]] = {
+    "baseline": dict(
+        overrides={},
+        hypothesis="paper-faithful baseline (re-measurement)",
+    ),
+    "moe_sg": dict(
+        overrides={"moe_stop_gradient_dispatch": True},
+        hypothesis=(
+            "the MoE dispatch/combine one-hots are integer-valued, so their "
+            "cotangents are mathematically zero; stop_gradient removes the "
+            "f32 (S,E,C) backward all-gathers (HLO showed 60 GiB of them) "
+            "-> collective term should drop several-fold; FLOPs slightly "
+            "down; forward numerics identical (verified bit-exact)"
+        ),
+    ),
+    "pad_vocab": dict(
+        overrides={"pad_vocab_multiple": 16},
+        hypothesis=(
+            "vocab not divisible by tp=16 leaves the LM head unsharded; "
+            "every CE chunk all-reduces (B,cs,V) f32 partials (12.3 GiB on "
+            "granite). Megatron-style padding shards the head -> those "
+            "all-reduces become (B,cs) scalars"
+        ),
+    ),
+    "moe_sg+pad": dict(
+        overrides={"moe_stop_gradient_dispatch": True, "pad_vocab_multiple": 16},
+        hypothesis="compose moe_sg and pad_vocab",
+    ),
+    "moe_sg+pad+group": dict(
+        overrides={"moe_stop_gradient_dispatch": True, "pad_vocab_multiple": 16,
+                   "moe_group": 1024},
+        hypothesis=(
+            "dispatch bytes scale with group size (S_g x E x C, C ~ S_g); "
+            "1024-token groups cut the one-hot traffic ~4x -> memory term "
+            "down on MoE train"
+        ),
+    ),
+    "gqa": dict(
+        overrides={"gqa_native": True},
+        hypothesis=(
+            "repeat_kv materializes H/KV-times larger K/V per layer "
+            "(8x for qwen2/llama3); contracting the grouped layout reads "
+            "K/V once -> memory term down on attention-heavy prefill"
+        ),
+    ),
+    "gqa+chunk2k": dict(
+        overrides={"gqa_native": True, "attn_chunk": 2048},
+        hypothesis=(
+            "larger q-chunks amortize K/V re-reads across chunks: HBM "
+            "traffic for K/V scales with n_chunks; 2048-chunks halve it if "
+            "score memory still fits"
+        ),
+    ),
+    "gqa+ce1k": dict(
+        overrides={"gqa_native": True, "ce_chunk": 1024},
+        hypothesis="halve CE-chunk count: fewer head re-reads in fwd+bwd",
+    ),
+    "moe_group_512": dict(
+        overrides={"moe_stop_gradient_dispatch": True, "pad_vocab_multiple": 16,
+                   "moe_group": 512},
+        hypothesis="push dispatch-group scaling further (512-token groups)",
+    ),
+}
+
+
+def flash_whatif(arch: str, shape_name: str, report: str) -> Dict[str, Any]:
+    """What-if analysis: replace the XLA attention path's HBM traffic with
+    the fused Pallas flash kernel's (kernels/flash_attention.py, validated
+    in interpret mode -- it cannot be *compiled* on this CPU container, so
+    its effect on the roofline is derived by measuring the XLA attention
+    component in isolation at production shape+sharding and substituting
+    the kernel's q+k+v+o traffic)."""
+    import dataclasses
+    import functools
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_shape
+    from repro.models.layers import attention, repeat_kv
+    from .dryrun import _cost_dict, _with_depth
+    from .mesh import HW, make_production_mesh
+    from .sharding import make_plan, axis_size
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=False)
+    plan = make_plan(mesh, cfg)
+    chips = int(np.prod(mesh.devices.shape))
+    qc = 256 if plan.huge and cfg.attn_chunk > 256 else cfg.attn_chunk
+
+    B = shape.global_batch
+    S = shape.seq_len + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q_s = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+    kv_s = jax.ShapeDtypeStruct((B, S, KV, hd), jnp.bfloat16)
+
+    def attn_fn(q, k, v):
+        return attention(q, repeat_kv(k, H // KV), repeat_kv(v, H // KV),
+                         causal=True, q_chunk=qc, unroll=True)
+
+    bspec = P("data", None, "model" if H % 16 == 0 else None, None)
+    kvspec = P("data", None, None, None)
+    sh = lambda s: NamedSharding(mesh, s)
+    lowered = jax.jit(
+        attn_fn, in_shardings=(sh(bspec), sh(kvspec), sh(kvspec))
+    ).lower(q_s, kv_s, kv_s)
+    cc = lowered.compile()
+    xla_bytes = _cost_dict(cc)["bytes accessed"]        # per device, 1 layer
+    flash_bytes = (2 * B * S * H * hd + 2 * B * S * KV * hd) * 2 / chips
+
+    # read the baseline record
+    import json as _json
+    base = None
+    for path in ("reports/dryrun.json", report):
+        if os.path.exists(path):
+            for r in _json.load(open(path)):
+                if (r["arch"], r["shape"], r.get("multi_pod")) == (arch, shape_name, False) \
+                        and r["status"] == "ok" and not r.get("tag"):
+                    base = r
+    assert base, "run the baseline dry-run first"
+    L = cfg.n_layers
+    saved = max(xla_bytes - flash_bytes, 0.0) * L
+    mem_new = base["roofline"]["memory_s"] - saved / HW.HBM_BW
+    rec = dict(base)
+    rec["tag"] = "flash_whatif"
+    rec["hypothesis"] = (
+        "the f32 score/prob matrices written to HBM per (q-chunk x layer) "
+        "dominate prefill memory; the fused flash kernel keeps them in VMEM "
+        "so per-layer attention traffic collapses to q+k+v+o"
+    )
+    rec["attention_component_bytes_per_layer"] = xla_bytes
+    rec["flash_bytes_per_layer"] = flash_bytes
+    rec["roofline"] = dict(base["roofline"])
+    rec["roofline"]["memory_s"] = mem_new
+    rec["roofline"]["bottleneck"] = max(
+        ("compute", rec["roofline"]["compute_s"]),
+        ("memory", mem_new),
+        ("collective", rec["roofline"]["collective_s"]),
+        key=lambda kv: kv[1])[0]
+    print(f"[flash_whatif] {arch} x {shape_name}: attention component "
+          f"{xla_bytes/2**30:.2f} GiB/layer -> flash {flash_bytes/2**30:.3f} "
+          f"GiB/layer; memory term {base['roofline']['memory_s']*1e3:.0f}ms "
+          f"-> {mem_new*1e3:.0f}ms (bottleneck {rec['roofline']['bottleneck']})")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--step", default=None)
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ArchConfig overrides (ad-hoc step)")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--method", default="gradestc")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--report", default="reports/perf_iterations.json")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, s in STEPS.items():
+            print(f"{name:20s} {s['overrides']}")
+        return 0
+
+    from .dryrun import dryrun_pair
+
+    if args.step == "flash_whatif":
+        rec = flash_whatif(args.arch, args.shape, args.report)
+        data = []
+        if os.path.exists(args.report):
+            with open(args.report) as f:
+                data = json.load(f)
+        data.append(rec)
+        with open(args.report, "w") as f:
+            json.dump(data, f, indent=1)
+        return 0
+
+    if args.overrides:
+        step = dict(overrides=json.loads(args.overrides),
+                    hypothesis=args.hypothesis or "(ad-hoc)")
+        args.step = args.step or "adhoc"
+    else:
+        step = STEPS[args.step]
+    rec = dryrun_pair(
+        args.arch, args.shape, method=args.method,
+        cfg_overrides=step["overrides"], tag=args.step,
+    )
+    rec["hypothesis"] = step["hypothesis"]
+
+    data = []
+    if os.path.exists(args.report):
+        with open(args.report) as f:
+            data = json.load(f)
+    data.append(rec)
+    os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+    with open(args.report, "w") as f:
+        json.dump(data, f, indent=1)
+
+    if rec["status"] == "ok" and "roofline" in rec:
+        r = rec["roofline"]
+        print(f"[{args.step}] {args.arch} x {args.shape}: "
+              f"compute={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
+              f"coll={r['collective_s']*1e3:.1f}ms -> {r['bottleneck']} "
+              f"(peak {rec['memory']['peak_bytes_tpu']/2**30:.2f}GiB)")
+    else:
+        print(f"[{args.step}] status={rec['status']}: {rec.get('error','')[:200]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,302 @@
+"""Divisibility-aware sharding policy for every arch family and input shape.
+
+Concepts
+--------
+* ``tp_axes``   -- mesh axes carrying tensor/expert parallelism.  ("model",)
+  for architectures whose per-replica footprint fits a 16-chip group;
+  ("data", "model") (FSDP-style, 256-way) for the huge ones (dbrx-132b,
+  qwen2-vl-72b, yi-34b) whose weights cannot replicate per client group.
+* ``client_axes`` -- mesh axes enumerating FL clients in the train step
+  (DESIGN.md Sec. 3).  Complement of tp_axes (plus "pod" when present).
+* every rule shards a dimension only when its size is divisible by the mesh
+  axis size -- otherwise the dimension stays replicated (GSPMD needs even
+  partitions for inputs/outputs).
+
+GradESTC state/specs: the segmented gradient matrix is oriented so that its
+row axis ``l`` coincides with the parameter's tp-sharded dimension; the basis
+``M (l, k)`` then shards on ``l`` and the whole codec is shard-local except a
+small ``(k, m)`` psum and the payload gather over clients (DESIGN.md Sec. 5,
+"TPU-native rethinking").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import param_group_shapes
+from repro.models.config import ArchConfig, InputShape
+
+__all__ = [
+    "MeshPlan", "make_plan", "param_specs", "batch_specs", "cache_specs",
+    "named", "axis_size",
+]
+
+#: per-replica bf16 bytes above which clients can no longer hold replicas on
+#: a 16-chip group (4 copies live during an FL round: global, client, delta,
+#: grads; budget ~12 GB of 16 GB HBM).
+_HUGE_BYTES = 12 * 1024**3 / 4
+
+
+class MeshPlan:
+    """Resolved axis assignment for one (arch, mesh) pair."""
+
+    def __init__(self, mesh: Mesh, cfg: ArchConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.axes = tuple(mesh.axis_names)
+        n_params = sum(
+            int(np.prod(shape)) * stack
+            for shape, stack in param_group_shapes(cfg).values()
+        )
+        self.param_bytes = 2 * n_params
+        self.huge = self.param_bytes > _HUGE_BYTES * axis_size(mesh, "model")
+        if self.huge:
+            # 2-D weight sharding regime: within every layer matrix one dim
+            # shards over "model" and a second over "data" (256-way), so
+            # weights, grads, optimizer state and codec state all fit; the
+            # batch also shards over "data" (weights are transiently
+            # re-gathered as needed -- FSDP-like).  Clients = whole pods.
+            self.tp_axes: Tuple[str, ...] = ("model",)
+            self.second_axes: Tuple[str, ...] = ("data",)
+            self.flat_tp_axes: Tuple[str, ...] = ("data", "model")
+            self.client_axes: Tuple[str, ...] = ("pod",) if "pod" in self.axes else ()
+            self.inner_batch_axes: Tuple[str, ...] = ("data",)
+        else:
+            self.tp_axes = ("model",)
+            self.second_axes = ()
+            self.flat_tp_axes = ("model",)
+            self.client_axes = tuple(a for a in ("pod", "data") if a in self.axes)
+            #: batch axes for per-client batches (train) -- axes not used by
+            #: clients or tp
+            self.inner_batch_axes = tuple(
+                a for a in self.axes
+                if a not in self.client_axes and a not in self.tp_axes
+            )
+        #: batch axes for serving (no client axis)
+        self.serve_batch_axes = tuple(a for a in self.axes if a != "model")
+
+    @property
+    def n_clients(self) -> int:
+        n = 1
+        for a in self.client_axes:
+            n *= axis_size(self.mesh, a)
+        return max(n, 1)
+
+    def tp_size(self) -> int:
+        n = 1
+        for a in self.tp_axes:
+            n *= axis_size(self.mesh, a)
+        return n
+
+    # -- helpers -----------------------------------------------------------
+
+    def shard_dim(self, size: int, axes: Tuple[str, ...]) -> Optional[Tuple[str, ...]]:
+        """Return axes if ``size`` divides evenly over them, else None."""
+        total = 1
+        for a in axes:
+            total *= axis_size(self.mesh, a)
+        return axes if size % total == 0 and total > 1 else None
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def make_plan(mesh: Mesh, cfg: ArchConfig) -> MeshPlan:
+    return MeshPlan(mesh, cfg)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def _matrix_spec(plan: MeshPlan, shape: Tuple[int, ...], prefer: int,
+                 tp: Optional[Tuple[str, ...]] = None) -> P:
+    """Spec for a per-layer matrix: shard dim ``prefer`` over ``tp`` axes
+    when divisible, else try the other matrix dims, else replicate."""
+    nd = len(shape)
+    tp = plan.tp_axes if tp is None else tp
+    order = [prefer] + [i for i in range(nd) if i != prefer]
+    for dim in order:
+        if plan.shard_dim(shape[dim], tp):
+            spec = [None] * nd
+            spec[dim] = tp if len(tp) > 1 else tp[0]
+            return P(*spec)
+    # fall back to model-only when the combined axes don't divide
+    if len(tp) > 1:
+        for dim in order:
+            if plan.shard_dim(shape[dim], ("model",)):
+                spec = [None] * nd
+                spec[dim] = "model"
+                return P(*spec)
+    return P(*([None] * nd))
+
+
+#: group-name fragment -> preferred shard dim index (within per-layer shape).
+#: Column-parallel for input projections, row-parallel for output
+#: projections (megatron pattern); expert axis for MoE banks; vocab for
+#: embeddings.
+_PREFER_RULES = (
+    ("moe_wgate", 0), ("moe_win", 0), ("moe_wout", 0),       # (E, D, F): E
+    ("router", 1),
+    ("attn_wq", 1), ("attn_wk", 1), ("attn_wv", 1), ("attn_wo", 0),
+    ("wq", 1), ("wk", 1), ("wv", 1), ("wo", 0),
+    ("mlp_wgate", 1), ("mlp_win", 1), ("mlp_wout", 0),
+    ("cm_wk", 1), ("cm_wv", 0), ("cm_wr", 1),
+    ("tm_wr", 1), ("tm_wk", 1), ("tm_wv", 1), ("tm_wg", 1), ("tm_wo", 0),
+    ("w_y", 1), ("w_x", 1), ("w_rg", 1), ("w_ig", 1), ("w_o", 0),
+    ("embed", 0), ("head", 1), ("pos", 0),
+)
+
+
+def _prefer_for(name: str, shape: Tuple[int, ...]) -> int:
+    for frag, dim in _PREFER_RULES:
+        if frag in name:
+            return min(dim, len(shape) - 1)
+    return len(shape) - 1
+
+
+_STACK_CONTAINERS = ("/layers/", "/rec/", "/attn/", "/enc/", "/dec/")
+
+
+def _spec_tree(plan: MeshPlan, params: Any, path: str = "", role: str = "train") -> Any:
+    if isinstance(params, dict):
+        return {k: _spec_tree(plan, v, f"{path}/{k}", role) for k, v in params.items()}
+    shape = tuple(params.shape)
+    under_stack = any(seg in path for seg in _STACK_CONTAINERS)
+    if len(shape) <= 1 or (under_stack and len(shape) == 2):
+        # 1-D, or stacked per-layer vectors (L, D): replicate (tiny)
+        return P(*([None] * len(shape)))
+    if under_stack and len(shape) >= 3:
+        per_layer = shape[1:]
+        prefer = _prefer_for(path, per_layer)
+        if role == "serve" and plan.huge and "moe_w" in path:
+            # expert-parallel serving: experts over "data", ffn over "model"
+            inner = [None] * len(per_layer)
+            if plan.shard_dim(per_layer[0], ("data",)):
+                inner[0] = "data"
+            for i in sorted(range(1, len(per_layer)), key=lambda i: -per_layer[i]):
+                if plan.shard_dim(per_layer[i], ("model",)):
+                    inner[i] = "model"
+                    break
+            return P(None, *inner)
+        # train (or small archs): within-layer "model" on the preferred dim
+        # plus (huge regime, train only) "data" on the largest other
+        # divisible dim -- 2-D sharding so weights/grads/codec state are
+        # 256-way sharded.  Serving keeps weights model-only so activations
+        # stay batch-sharded over "data" (the 2-D weight sharding would
+        # force a full-batch activation gather -- measured 28 GiB attention
+        # score buffers on yi-34b prefill).
+        inner = list(_matrix_spec(plan, per_layer, prefer, tp=plan.tp_axes))
+        if plan.second_axes and role == "train":
+            cands = sorted(
+                (i for i in range(len(per_layer)) if inner[i] is None),
+                key=lambda i: -per_layer[i],
+            )
+            for i in cands:
+                if plan.shard_dim(per_layer[i], plan.second_axes):
+                    sa = plan.second_axes
+                    inner[i] = sa if len(sa) > 1 else sa[0]
+                    break
+        return P(None, *inner)
+    # unstacked tensors (embeddings, heads, positional tables)
+    prefer = _prefer_for(path, shape)
+    return _matrix_spec(plan, shape, prefer, tp=plan.flat_tp_axes)
+
+
+def param_specs(plan: MeshPlan, params: Any, role: str = "train") -> Any:
+    """PartitionSpec pytree matching ``params`` (no client axis)."""
+    return _spec_tree(plan, params, role=role)
+
+
+def client_stacked_specs(plan: MeshPlan, params: Any) -> Any:
+    """Specs for per-client replicated params: leading client axis sharded
+    over ``client_axes``."""
+    base = param_specs(plan, params)
+    cl = plan.client_axes
+    cspec = cl if len(cl) > 1 else (cl[0] if cl else None)
+    return jax.tree.map(
+        lambda s: P(cspec, *s), base,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# batch and cache specs
+# --------------------------------------------------------------------------
+
+def batch_specs(plan: MeshPlan, batch: Dict[str, Any], *, client_axis: bool) -> Dict[str, P]:
+    """tokens/labels (B, S) or (C, B, S); modality stubs get matching specs."""
+    out = {}
+    for k, v in batch.items():
+        nd = v.ndim
+        if client_axis:
+            cl = plan.client_axes
+            cspec = cl if len(cl) > 1 else (cl[0] if cl else None)
+            ib = plan.inner_batch_axes
+            bspec = ib if len(ib) > 1 else (ib[0] if ib else None)
+            out[k] = P(cspec, bspec, *([None] * (nd - 2)))
+        else:
+            sb = plan.serve_batch_axes
+            B = v.shape[0]
+            total = 1
+            for a in sb:
+                total *= axis_size(plan.mesh, a)
+            if B % max(total, 1) == 0 and total > 1:
+                out[k] = P(sb if len(sb) > 1 else sb[0], *([None] * (nd - 1)))
+            else:
+                out[k] = P(*([None] * nd))
+    return out
+
+
+def cache_specs(plan: MeshPlan, cache: Any, batch: int) -> Any:
+    """KV/recurrent cache specs for serving.
+
+    Batch shards over the serve batch axes when divisible; otherwise
+    (long_500k, batch=1) the *sequence* axis shards there (flash-decoding
+    over sequence shards).  Head/feature trailing dims shard over "model"
+    when divisible.
+    """
+    mesh = plan.mesh
+    sb = plan.serve_batch_axes
+    sb_total = 1
+    for a in sb:
+        sb_total *= axis_size(mesh, a)
+    sb_spec = sb if len(sb) > 1 else (sb[0] if sb else None)
+
+    def leaf_spec(x) -> P:
+        shape = tuple(x.shape)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        # identify axes: (L, B, S, KV, hd) / (L, B, S, H, hd) / (L, B, D) /
+        # (L, B, cw-1, R) / (L, B, H, hd, hd)
+        if nd >= 2 and shape[1] == batch:
+            if batch % sb_total == 0 and sb_total > 1:
+                spec[1] = sb_spec
+            elif nd >= 3 and shape[2] % sb_total == 0 and sb_total > 1:
+                spec[2] = sb_spec          # shard sequence instead
+        # trailing feature dims over model
+        for dim in range(nd - 1, 1, -1):
+            if spec[dim] is None and plan.shard_dim(shape[dim], ("model",)):
+                spec[dim] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree.map(
+        lambda x: leaf_spec(x),
+        cache,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, (dict, tuple, list)),
+    )

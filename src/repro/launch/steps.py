@@ -1,0 +1,409 @@
+"""SPMD step functions lowered by the dry-run and the production drivers.
+
+Three kinds, per input shape:
+
+  * train_4k            -> ``fl_round_step``: one FedAvg round -- broadcast
+    global params to per-client replicas, ``local_steps`` SGD steps per
+    client on its batch shard, GradESTC-compress the deltas, aggregate the
+    *compressed payloads* across clients, reconstruct, apply (server lr).
+    The baseline variant aggregates dense deltas with a mean (all-reduce) --
+    exactly the FedAvg reference the paper compares against.
+
+  * prefill_32k         -> ``prefill_step``: full forward, returns logits of
+    the last position + populated KV cache (abstract in the dry-run).
+
+  * decode_32k/long_500k-> ``decode_step``: one token against the cache.
+
+The GradESTC aggregation is written with ``shard_map`` around the payload
+gather + local reconstruction so that the collective schedule is pinned:
+an all-gather of (k x m coefficients + d x l/TP basis shards) over the
+client axes, then a shard-local einsum -- never a full-gradient all-reduce
+(DESIGN.md Sec. 3 "Uplink == the cross-client collective").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gradestc as ge
+from repro.core.policy import CompressionPolicy, LayerPlan, make_policy
+from repro.models import loss_fn, model, param_group_shapes
+from repro.models.config import ArchConfig, InputShape
+
+from .sharding import MeshPlan, axis_size, batch_specs, cache_specs, client_stacked_specs, param_specs
+
+__all__ = [
+    "GEState", "make_ge_state", "ge_state_specs",
+    "make_fl_round_step", "make_serve_steps", "train_input_specs",
+    "serve_input_specs", "compression_policy_for",
+]
+
+
+# --------------------------------------------------------------------------
+# GradESTC distributed state
+# --------------------------------------------------------------------------
+
+class GEState(NamedTuple):
+    """Per-(client, group) compressor state for the SPMD round step.
+
+    M:    {group: (C, L, l, k)}   client axis sharded over client_axes,
+                                  l sharded over tp axes when divisible.
+    keys: {group: (C, L, 2)}      per-compressor PRNG keys.
+    """
+
+    M: Dict[str, jnp.ndarray]
+    keys: Dict[str, jnp.ndarray]
+
+
+def compression_policy_for(cfg: ArchConfig, plan: MeshPlan) -> CompressionPolicy:
+    """Paper policy with the TPU alignment rule: the segment length l is the
+    parameter's tp-sharded dimension (DESIGN.md Sec. 5) -- falling back to
+    the sqrt rule when a group is unsharded."""
+    groups = param_group_shapes(cfg)
+    overrides = {}
+    specs = None  # resolved lazily per group below
+    for name, (shape, stack) in groups.items():
+        if len(shape) < 2:
+            continue
+        n = int(np.prod(shape))
+        if n < 65536:
+            continue
+        # orient l along the dim this framework shards for that group
+        from .sharding import _matrix_spec, _prefer_for  # local import
+        prefer = _prefer_for(name, shape)
+        spec = _matrix_spec(plan, shape, prefer)
+        sharded_dim = next(
+            (i for i, s in enumerate(spec) if s is not None), None
+        )
+        if sharded_dim is None:
+            continue  # unsharded group: keep the default sqrt rule
+        l = int(shape[sharded_dim])
+        if len(shape) > 2:
+            # fold extra dims into m (e.g. MoE (E, D, F) with E sharded:
+            # l = E is degenerate -- use the largest remaining dim instead)
+            if l < 256:
+                rest = [s for i, s in enumerate(shape) if i != sharded_dim]
+                l = int(max(rest))
+        m = n // l
+        k = max(4, min(l // 8, m // 4, 64))
+        k = 1 << (k.bit_length() - 1) if k & (k - 1) else k
+        overrides[name] = (k, l)
+    return make_policy(groups, overrides=overrides)
+
+
+def make_ge_state(cfg: ArchConfig, policy: CompressionPolicy, n_clients: int,
+                  seed: int = 0, dtype=jnp.float32) -> GEState:
+    M, keys = {}, {}
+    base = jax.random.PRNGKey(seed)
+    for name, plan in policy.plans.items():
+        if not plan.compress:
+            continue
+        M[name] = jnp.zeros((n_clients, plan.stack, plan.l, plan.k), dtype)
+        keys[name] = jax.random.split(
+            jax.random.fold_in(base, hash(name) % (2**31)),
+            n_clients * plan.stack,
+        ).reshape(n_clients, plan.stack, 2)
+    return GEState(M=M, keys=keys)
+
+
+def ge_state_specs(plan: MeshPlan, policy: CompressionPolicy) -> Any:
+    cl = plan.client_axes
+    cspec = cl if len(cl) > 1 else (cl[0] if cl else None)
+    tp = plan.tp_axes
+    M_specs, key_specs = {}, {}
+    for name, lp in policy.plans.items():
+        if not lp.compress:
+            continue
+        lspec = tp if len(tp) > 1 else tp[0]
+        if lp.l % max(plan.tp_size(), 1) != 0:
+            lspec = None
+        M_specs[name] = P(cspec, None, lspec, None)
+        key_specs[name] = P(cspec, None, None)
+    return GEState(M=M_specs, keys=key_specs)
+
+
+# --------------------------------------------------------------------------
+# group <-> matrices plumbing (stacked, on-device)
+# --------------------------------------------------------------------------
+
+def _group_leaf(params: Any, path: str) -> jnp.ndarray:
+    node = params
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _set_leaf(params: Any, path: str, val: jnp.ndarray) -> Any:
+    parts = path.split("/")
+
+    def rec(node, i):
+        node = dict(node)
+        if i == len(parts) - 1:
+            node[parts[i]] = val
+        else:
+            node[parts[i]] = rec(node[parts[i]], i + 1)
+        return node
+
+    return rec(params, 0)
+
+
+def _delta_to_G(delta: jnp.ndarray, lp: LayerPlan) -> jnp.ndarray:
+    """(C?, L, *shape) -> (C?, L, l, m) oriented so rows are the l axis.
+
+    The paper reshapes the WHDC-flattened vector into length-l column
+    segments; with l chosen as one tensor dimension this is a transpose-
+    reshape, shard-local when l is the tp-sharded dim."""
+    lead = delta.shape[: delta.ndim - len(lp.shape)]
+    shape = lp.shape
+    # find the axis whose size == l (prefer exact match)
+    ax = next((i for i, s in enumerate(shape) if s == lp.l), None)
+    if ax is None:
+        flat = delta.reshape(*lead, lp.m, lp.l)
+        return jnp.swapaxes(flat, -1, -2)
+    perm_tail = (ax,) + tuple(i for i in range(len(shape)) if i != ax)
+    perm = tuple(range(len(lead))) + tuple(len(lead) + i for i in perm_tail)
+    moved = jnp.transpose(delta, perm)
+    return moved.reshape(*lead, lp.l, lp.m)
+
+
+def _G_to_delta(G: jnp.ndarray, lp: LayerPlan, like_shape) -> jnp.ndarray:
+    lead = G.shape[:-2]
+    shape = lp.shape
+    ax = next((i for i, s in enumerate(shape) if s == lp.l), None)
+    if ax is None:
+        flat = jnp.swapaxes(G, -1, -2).reshape(*lead, lp.n)
+        return flat.reshape(like_shape)
+    rest = tuple(s for i, s in enumerate(shape) if i != ax)
+    moved = G.reshape(*lead, lp.l, *rest)
+    inv = list(range(len(lead)))
+    tail_perm = [0] * len(shape)
+    tail_src = (ax,) + tuple(i for i in range(len(shape)) if i != ax)
+    for pos, src in enumerate(tail_src):
+        tail_perm[src] = len(lead) + pos
+    return jnp.transpose(moved, tuple(inv) + tuple(tail_perm)).reshape(like_shape)
+
+
+# --------------------------------------------------------------------------
+# FL round step
+# --------------------------------------------------------------------------
+
+def make_fl_round_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    plan: MeshPlan,
+    policy: CompressionPolicy,
+    *,
+    method: str = "gradestc",        # "gradestc" | "fedavg" | "fedpaq"
+    local_steps: int = 1,
+    grad_accum: int = 1,
+    lr: float = 0.01,
+    server_lr: float = 1.0,
+    d_static: int = 16,
+) -> Callable:
+    """Build the jittable FL round function.
+
+    signature: (global_params, ge_state, batches) ->
+               (new_params, new_ge_state, metrics)
+    batches: {tokens/labels: (C, B_c, S), ...}
+
+    ``grad_accum`` splits each client batch into microbatches scanned with
+    f32 gradient accumulation -- bounds the live activation-checkpoint
+    memory to one microbatch (required for the huge FSDP-regime archs).
+    """
+    C = plan.n_clients
+    group_paths = [p for p in policy.plans]
+    comp_paths = [p for p, lp in policy.plans.items() if lp.compress]
+    cl_axes = plan.client_axes
+
+    def make_local_train(pin_grads):
+        """pin_grads: optional fn pinning a grad pytree to the parameter
+        shardings -- used in the FSDP (C == 1) regime where the f32
+        accumulation carry would otherwise replicate over the data axis."""
+
+        def client_grad(p, batch_c):
+            if grad_accum == 1:
+                g = jax.grad(lambda pp: loss_fn(cfg, pp, batch_c))(p)
+                return pin_grads(g) if pin_grads else g
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]),
+                batch_c,
+            )
+
+            def acc_step(g_acc, mb):
+                g = jax.grad(lambda pp: loss_fn(cfg, pp, mb))(p)
+                if pin_grads:
+                    g = pin_grads(g)
+                out = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / grad_accum, g_acc, g
+                )
+                return (pin_grads(out) if pin_grads else out), None
+
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p)
+            if pin_grads:
+                g0 = pin_grads(g0)
+            # cost-mode lowerings (cfg.attn_unroll) must unroll this scan
+            # too, or cost_analysis counts a single microbatch (discovered
+            # via a spurious 8x "win" -- EXPERIMENTS.md SPerf, dbrx iter 4)
+            g_sum, _ = jax.lax.scan(acc_step, g0, mbs,
+                                    unroll=grad_accum if cfg.attn_unroll else 1)
+            return g_sum
+
+        def local_train(params_c, batch_c):
+            def one_step(p, _):
+                g = client_grad(p, batch_c)
+                return jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32) - lr * b.astype(jnp.float32)).astype(a.dtype),
+                    p, g,
+                ), None
+            out, _ = jax.lax.scan(one_step, params_c, None, length=local_steps)
+            return out
+
+        return local_train
+
+    def compress_group(Ms, keys, G, k: int, d: int):
+        """vmapped over (C, L): returns new M, keys, payload pieces."""
+        def one(Mi, key, Gi):
+            st = ge.CompressorState(M=Mi, key=key, initialized=jnp.ones((), jnp.bool_))
+            st2, payload, stats = ge.compress_update(st, Gi, k=k, d=d)
+            return st2.M, st2.key, payload.coeffs, payload.new_vectors, payload.replaced_mask, stats.d_r
+        f = jax.vmap(jax.vmap(one))
+        return f(Ms, keys, G)
+
+    def fl_round(global_params, ge_state: GEState, batches):
+        # sharding pins at every stage boundary: without them GSPMD loses
+        # the tensor-parallel sharding across the client-mean / loop-carry
+        # boundaries and falls back to full per-device replication
+        # (empirically 4x temp memory and 3x all-reduce bytes on
+        # gemma3-1b/train_4k -- see EXPERIMENTS.md SPerf).
+        from .sharding import client_stacked_specs, param_specs  # cycle-free
+        p_specs = param_specs(plan, global_params)
+        cs_specs = client_stacked_specs(plan, global_params)
+        has_shape = lambda x: hasattr(x, "shape") and not isinstance(x, dict)
+
+        def pin(tree, specs):
+            return jax.tree.map(
+                lambda a, s: jax.lax.with_sharding_constraint(
+                    a, jax.sharding.NamedSharding(mesh, s)),
+                tree, specs, is_leaf=has_shape,
+            )
+
+        if C == 1:
+            # FSDP regime (huge archs): no client vmap; run the single
+            # client unbatched so sharding pins apply at parameter rank.
+            local_train = make_local_train(lambda g: pin(g, p_specs))
+            batch_one = jax.tree.map(lambda x: x[0], batches)
+            cp_one = local_train(pin(global_params, p_specs), batch_one)
+            cp_one = pin(cp_one, p_specs)
+            client_params = jax.tree.map(lambda p: p[None], cp_one)
+        else:
+            local_train = make_local_train(None)
+            # 1. broadcast global -> per-client replicas
+            client_params = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (C,) + p.shape), global_params
+            )
+            client_params = pin(client_params, cs_specs)
+            # 2. local training, vmapped over the client axis
+            client_params = jax.vmap(local_train)(client_params, batches)
+            client_params = pin(client_params, cs_specs)
+        # 3. per-group deltas (C, L, ...), f32 for the codec
+        metrics = {}
+        new_M = dict(ge_state.M)
+        new_keys = dict(ge_state.keys)
+        recon_deltas = {}
+        for path in group_paths:
+            lp = policy.plans[path]
+            g_new = _group_leaf(client_params, path)
+            g_old = _group_leaf(global_params, path)
+            delta = (g_new.astype(jnp.float32) - g_old.astype(jnp.float32)[None])
+            if method == "gradestc" and lp.compress:
+                G = _delta_to_G(delta.reshape((C, lp.stack) + lp.shape), lp)
+                M2, k2, A, newvec, repl, d_r = compress_group(
+                    ge_state.M[path], ge_state.keys[path], G, lp.k, d_static
+                )
+                new_M[path], new_keys[path] = M2, k2
+
+                # -- aggregation: gather compressed payloads over clients,
+                #    reconstruct shard-locally, average.  Ghat_c = M_c A_c.
+                Ghat_avg = jnp.einsum("cxlk,cxkm->xlm", M2, A) / C
+                recon = _G_to_delta(Ghat_avg, lp, (lp.stack,) + lp.shape)
+                recon_deltas[path] = recon.reshape(g_old.shape)
+                metrics[f"d_r/{path}"] = jnp.mean(d_r.astype(jnp.float32))
+            else:
+                recon_deltas[path] = jnp.mean(delta, axis=0).reshape(g_old.shape)
+        # 4. server update (pinned back to the parameter shardings)
+        new_params = global_params
+        for path in group_paths:
+            old = _group_leaf(global_params, path)
+            spec = _group_leaf(p_specs, path)
+            rec = jax.lax.with_sharding_constraint(
+                recon_deltas[path], jax.sharding.NamedSharding(mesh, spec))
+            upd = (old.astype(jnp.float32) + server_lr * rec).astype(old.dtype)
+            new_params = _set_leaf(new_params, path, upd)
+        metrics["loss_proxy"] = jnp.asarray(0.0)
+        return new_params, GEState(M=new_M, keys=new_keys), metrics
+
+    return fl_round
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+def make_serve_steps(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        # hidden-then-head: only the last position's logits are formed
+        # (materializing (B, S, V) at 32k x 262k vocab would be absurd).
+        hidden, head = model.forward_hidden(cfg, params, batch)
+        return (hidden[:, -1, :] @ head).astype(jnp.float32)
+
+    def decode(params, cache, batch):
+        return model.decode_step(cfg, params, cache, batch["tokens"])
+
+    return prefill_step, decode
+
+
+# --------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct) per shape
+# --------------------------------------------------------------------------
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape, plan: MeshPlan):
+    """{name: ShapeDtypeStruct} for one FL-round step's batches."""
+    C = plan.n_clients
+    B = shape.global_batch // C
+    S = shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((C, B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((C, B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["audio_frames"] = jax.ShapeDtypeStruct(
+            (C, B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and cfg.vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (C, B, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def serve_input_specs(cfg: ArchConfig, shape: InputShape, *, decode: bool):
+    B, S = shape.global_batch, shape.seq_len
+    if decode:
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and cfg.vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs

@@ -1,0 +1,25 @@
+"""repro.models -- architecture zoo (pure JAX, scan-over-layers, pjit-ready).
+
+Families: dense / moe / vlm (transformer.py), ssm (rwkv6.py),
+hybrid (rglru.py), encdec (encdec.py).  See model.py for the unified API.
+"""
+
+from . import config, encdec, layers, model, moe, rglru, rwkv6, transformer
+from .config import SHAPES, ArchConfig, InputShape
+from .model import (
+    count_params,
+    decode_step,
+    extra_inputs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_group_shapes,
+)
+
+__all__ = [
+    "config", "encdec", "layers", "model", "moe", "rglru", "rwkv6", "transformer",
+    "SHAPES", "ArchConfig", "InputShape",
+    "count_params", "decode_step", "extra_inputs", "forward",
+    "init_cache", "init_params", "loss_fn", "param_group_shapes",
+]

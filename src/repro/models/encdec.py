@@ -1,0 +1,247 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Assignment carve-out: the mel-spectrogram + conv feature extractor is a STUB
+-- ``input_specs()`` supplies precomputed frame embeddings (B, frames, D),
+and this module implements the transformer that consumes them:
+
+  * encoder: bidirectional self-attention + GELU MLP, learned positions;
+  * decoder: causal self-attention + cross-attention to the encoder output
+    + GELU MLP, learned positions.
+
+Decode path: the encoder output (and its per-layer cross K/V projections)
+are computed once at prefill; each decode step appends one token to the
+decoder self-attention KV cache and re-reads the fixed cross K/V.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import attention, decode_attention, layer_norm, repeat_kv
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "init_params", "forward", "forward_hidden", "encode_audio", "init_cache", "decode_step",
+    "EncDecCache", "param_group_shapes",
+]
+
+
+class EncDecCache(NamedTuple):
+    self_k: jnp.ndarray      # (L, B, S, H, hd)
+    self_v: jnp.ndarray      # (L, B, S, H, hd)
+    cross_k: jnp.ndarray     # (L, B, F, H, hd) -- fixed after prefill
+    cross_v: jnp.ndarray     # (L, B, F, H, hd)
+    length: jnp.ndarray      # () int32
+
+
+def _init_attn_block(key, L, D, H, hd, dt):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "wq": jax.random.normal(ks[0], (L, D, H * hd), dt) * s,
+        "wk": jax.random.normal(ks[1], (L, D, H * hd), dt) * s,
+        "wv": jax.random.normal(ks[2], (L, D, H * hd), dt) * s,
+        "wo": jax.random.normal(ks[3], (L, H * hd, D), dt) * (1.0 / math.sqrt(H * hd)),
+    }
+
+
+def _init_stack(cfg: ArchConfig, key: jax.Array, L: int, cross: bool) -> Params:
+    D, F, H, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1_w": jnp.ones((L, D), dt), "ln1_b": jnp.zeros((L, D), dt),
+        "ln_mlp_w": jnp.ones((L, D), dt), "ln_mlp_b": jnp.zeros((L, D), dt),
+        "self": _init_attn_block(ks[0], L, D, H, hd, dt),
+        "mlp_win": jax.random.normal(ks[1], (L, D, F), dt) / math.sqrt(D),
+        "mlp_bin": jnp.zeros((L, F), dt),
+        "mlp_wout": jax.random.normal(ks[2], (L, F, D), dt) / math.sqrt(F),
+        "mlp_bout": jnp.zeros((L, D), dt),
+    }
+    if cross:
+        p["ln2_w"] = jnp.ones((L, D), dt)
+        p["ln2_b"] = jnp.zeros((L, D), dt)
+        p["cross"] = _init_attn_block(ks[3], L, D, H, hd, dt)
+    return p
+
+
+def _padded_vocab(cfg: ArchConfig) -> int:
+    m = cfg.pad_vocab_multiple
+    return cfg.vocab if not m else ((cfg.vocab + m - 1) // m) * m
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    D, V = cfg.d_model, _padded_vocab(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "enc_pos": jax.random.normal(ks[0], (cfg.encoder_seq, D), dt) * 0.02,
+        "dec_pos": jax.random.normal(ks[1], (32768, D), dt) * 0.02,
+        "embed": jax.random.normal(ks[2], (V, D), dt) * 0.02,
+        "enc": _init_stack(cfg, ks[3], cfg.encoder_layers, cross=False),
+        "dec": _init_stack(cfg, ks[4], cfg.n_layers, cross=True),
+        "ln_enc_w": jnp.ones((D,), dt), "ln_enc_b": jnp.zeros((D,), dt),
+        "ln_dec_w": jnp.ones((D,), dt), "ln_dec_b": jnp.zeros((D,), dt),
+    }
+
+
+def _self_attn(cfg, w, h, *, causal, q_chunk=0, unroll=False):
+    B, S, D = h.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (h @ w["wq"]).reshape(B, S, H, hd)
+    k = (h @ w["wk"]).reshape(B, S, H, hd)
+    v = (h @ w["wv"]).reshape(B, S, H, hd)
+    o = attention(q, k, v, causal=causal, q_chunk=q_chunk, unroll=unroll)
+    return o.reshape(B, S, H * hd) @ w["wo"]
+
+
+def _cross_attn(cfg, w, h, enc_out):
+    B, S, D = h.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (h @ w["wq"]).reshape(B, S, H, hd)
+    k = (enc_out @ w["wk"]).reshape(B, enc_out.shape[1], H, hd)
+    v = (enc_out @ w["wv"]).reshape(B, enc_out.shape[1], H, hd)
+    o = attention(q, k, v, causal=False)
+    return o.reshape(B, S, H * hd) @ w["wo"]
+
+
+def _mlp(w, h):
+    y = jax.nn.gelu((h @ w["mlp_win"] + w["mlp_bin"]).astype(jnp.float32),
+                    approximate=True).astype(h.dtype)
+    return y @ w["mlp_wout"] + w["mlp_bout"]
+
+
+def encode_audio(cfg: ArchConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, F, D) stubbed conv-frontend output -> encoder states."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + params["enc_pos"][None, : frames.shape[1]]
+    eps = cfg.norm_eps
+
+    def body(xc, w):
+        h = layer_norm(xc, w["ln1_w"], w["ln1_b"], eps)
+        xc = xc + _self_attn(cfg, w["self"], h, causal=False, q_chunk=cfg.attn_chunk,
+                             unroll=cfg.attn_unroll)
+        h = layer_norm(xc, w["ln_mlp_w"], w["ln_mlp_b"], eps)
+        return xc + _mlp(w, h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return layer_norm(x, params["ln_enc_w"], params["ln_enc_b"], eps)
+
+
+def forward_hidden(
+    cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+    audio_frames: Optional[jnp.ndarray] = None, **_
+):
+    """Training / prefill forward up to the final norm."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    if audio_frames is None:
+        audio_frames = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), dt)
+    enc_out = encode_audio(cfg, params, audio_frames)
+    eps = cfg.norm_eps
+    x = params["embed"][tokens].astype(dt) + params["dec_pos"][None, :S]
+
+    def body(xc, w):
+        h = layer_norm(xc, w["ln1_w"], w["ln1_b"], eps)
+        xc = xc + _self_attn(cfg, w["self"], h, causal=True, q_chunk=cfg.attn_chunk,
+                             unroll=cfg.attn_unroll)
+        h = layer_norm(xc, w["ln2_w"], w["ln2_b"], eps)
+        xc = xc + _cross_attn(cfg, w["cross"], h, enc_out)
+        h = layer_norm(xc, w["ln_mlp_w"], w["ln_mlp_b"], eps)
+        return xc + _mlp(w, h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=cfg.scan_unroll)
+    x = layer_norm(x, params["ln_dec_w"], params["ln_dec_b"], eps)
+    return x, params["embed"].T                          # whisper ties head
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            audio_frames: Optional[jnp.ndarray] = None, **_) -> jnp.ndarray:
+    x, head = forward_hidden(cfg, params, tokens, audio_frames=audio_frames)
+    return (x @ head).astype(jnp.float32)[..., : cfg.vocab]
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, length=0,
+               enc_out: Optional[jnp.ndarray] = None,
+               params: Optional[Params] = None) -> EncDecCache:
+    dt = jnp.dtype(cfg.dtype)
+    L, H, hd, Fr = cfg.n_layers, cfg.n_heads, cfg.hd, cfg.encoder_seq
+    if enc_out is not None and params is not None:
+        # vectorized per-layer cross projections
+        ck = jnp.einsum("bfd,ldh->lbfh", enc_out, params["dec"]["cross"]["wk"]).reshape(
+            L, batch, Fr, H, hd)
+        cv = jnp.einsum("bfd,ldh->lbfh", enc_out, params["dec"]["cross"]["wv"]).reshape(
+            L, batch, Fr, H, hd)
+    else:
+        ck = jnp.zeros((L, batch, Fr, H, hd), dt)
+        cv = jnp.zeros((L, batch, Fr, H, hd), dt)
+    return EncDecCache(
+        self_k=jnp.zeros((L, batch, max_len, H, hd), dt),
+        self_v=jnp.zeros((L, batch, max_len, H, hd), dt),
+        cross_k=ck.astype(dt), cross_v=cv.astype(dt),
+        length=jnp.asarray(length, jnp.int32),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: EncDecCache,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, EncDecCache]:
+    dt = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B = tokens.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    x = params["embed"][tokens].astype(dt) + params["dec_pos"][cache.length][None, None]
+
+    def body(carry, lw):
+        (x,) = carry
+        w, sk, sv, ck, cv = lw
+        h = layer_norm(x, w["ln1_w"], w["ln1_b"], eps)
+        q = (h @ w["self"]["wq"]).reshape(B, 1, H, hd)
+        k = (h @ w["self"]["wk"]).reshape(B, 1, H, hd)
+        v = (h @ w["self"]["wv"]).reshape(B, 1, H, hd)
+        sk = jax.lax.dynamic_update_slice(sk, k, (0, cache.length, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v, (0, cache.length, 0, 0))
+        o = decode_attention(q, sk, sv, cache.length + 1)
+        x = x + o.reshape(B, 1, H * hd) @ w["self"]["wo"]
+        h = layer_norm(x, w["ln2_w"], w["ln2_b"], eps)
+        q = (h @ w["cross"]["wq"]).reshape(B, 1, H, hd)
+        o = decode_attention(q, ck, cv, jnp.asarray(ck.shape[1], jnp.int32))
+        x = x + o.reshape(B, 1, H * hd) @ w["cross"]["wo"]
+        h = layer_norm(x, w["ln_mlp_w"], w["ln_mlp_b"], eps)
+        return (x + _mlp(w, h),), (sk, sv)
+
+    (x,), (sk, sv) = jax.lax.scan(
+        body, (x,), (params["dec"], cache.self_k, cache.self_v,
+                     cache.cross_k, cache.cross_v)
+    )
+    x = layer_norm(x, params["ln_dec_w"], params["ln_dec_b"], eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)[..., : cfg.vocab]
+    return logits, EncDecCache(self_k=sk, self_v=sv, cross_k=cache.cross_k,
+                               cross_v=cache.cross_v, length=cache.length + 1)
+
+
+def param_group_shapes(cfg: ArchConfig):
+    D, F, H, hd, V = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.hd, cfg.vocab
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    g = {}
+    for pre, L in (("enc", Le), ("dec", Ld)):
+        g.update({
+            f"{pre}/self/wq": ((D, H * hd), L), f"{pre}/self/wk": ((D, H * hd), L),
+            f"{pre}/self/wv": ((D, H * hd), L), f"{pre}/self/wo": ((H * hd, D), L),
+            f"{pre}/mlp_win": ((D, F), L), f"{pre}/mlp_wout": ((F, D), L),
+        })
+    g.update({
+        "dec/cross/wq": ((D, H * hd), Ld), "dec/cross/wk": ((D, H * hd), Ld),
+        "dec/cross/wv": ((D, H * hd), Ld), "dec/cross/wo": ((H * hd, D), Ld),
+        "embed": ((_padded_vocab(cfg), D), 1),
+    })
+    return g

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN with top-k routing (granite-moe, dbrx).
+
+GShard/Mesh-style capacity-based dispatch expressed as einsums so GSPMD can
+partition it: the expert axis E of the weight banks shards over the "model"
+mesh axis (expert parallelism), and the dispatch/combine einsums lower to the
+expert all-to-all pattern (DESIGN.md Sec. 5).
+
+Tokens are processed in groups (``moe_group``); each group computes a
+(S_g, E, C) dispatch one-hot with per-expert capacity
+C = ceil(S_g * top_k * capacity_factor / E).  Overflow tokens fall back to
+the residual stream (standard capacity-drop semantics).
+
+The router runs in f32 and its weights are *excluded* from GradESTC
+compression (tiny but convergence-critical; see core/policy.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+__all__ = ["init_moe_ffn", "moe_ffn", "router_load_balance_loss"]
+
+#: tokens per dispatch group; keeps the (S_g, E, C) one-hot bounded.
+MOE_GROUP = 4096
+
+
+def init_moe_ffn(cfg: ArchConfig, key: jax.Array, L: int) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    s, sf = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    return {
+        "router": jax.random.normal(ks[0], (L, D, E), jnp.float32) * s,
+        "moe_wgate": jax.random.normal(ks[1], (L, E, D, F), dt) * s,
+        "moe_win": jax.random.normal(ks[2], (L, E, D, F), dt) * s,
+        "moe_wout": jax.random.normal(ks[3], (L, E, F, D), dt) * sf,
+    }
+
+
+def _dispatch_one_group(cfg: ArchConfig, x: jnp.ndarray, w: Params) -> jnp.ndarray:
+    """x: (S, D) one token group -> (S, D) expert-mixed output."""
+    S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    C = max(1, int(math.ceil(S * K * cfg.capacity_factor / E)))
+
+    logits = x.astype(jnp.float32) @ w["router"]            # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)         # (S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # (S, K, E) one-hot of chosen experts
+    sel = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, choice) within its expert's buffer:
+    # cumulative count over the flattened (choice-major) priority order.
+    selk = sel.transpose(1, 0, 2).reshape(K * S, E)          # choice-major
+    pos_flat = jnp.cumsum(selk, axis=0) - selk               # (K*S, E)
+    pos = pos_flat.reshape(K, S, E).transpose(1, 0, 2)       # (S, K, E)
+    within_cap = (pos < C) & (sel > 0)
+
+    dt = x.dtype
+    slot = jax.nn.one_hot(jnp.sum(pos * sel, axis=-1).astype(jnp.int32), C,
+                          dtype=dt)                          # (S, K, C)
+    sel_kept = (sel * within_cap).astype(dt)                 # (S, K, E)
+
+    # dispatch (S, E, C): token s occupies slot c of expert e.  Kept in the
+    # model dtype -- these are the largest activations of the MoE block.
+    if cfg.moe_stop_gradient_dispatch:
+        # The one-hot structure is integer-valued: routing indices carry no
+        # gradient, only the gate values do.  Without stop_gradient JAX
+        # still materializes (and GSPMD gathers) f32 (S, E, C) cotangents
+        # through these einsums -- measured 60 GiB of all-gather on
+        # granite-moe train_4k (EXPERIMENTS.md SPerf).  Gate gradients flow
+        # through the explicit ge factor below.
+        mask = jax.lax.stop_gradient(
+            jnp.einsum("ske,skc->sec", sel_kept, slot)
+        )
+        dispatch = mask
+        ge_ = jnp.einsum("ske,sk->se", sel_kept, gate_vals.astype(dt))
+        combine = mask * ge_[:, :, None]
+    else:
+        dispatch = jnp.einsum("ske,skc->sec", sel_kept, slot)
+        combine = jnp.einsum(
+            "ske,skc->sec", sel_kept * gate_vals[..., None].astype(dt), slot
+        )
+
+    xe = jnp.einsum("sec,sd->ecd", dispatch, x)              # (E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w["moe_wgate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, w["moe_win"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, w["moe_wout"])        # (E, C, D)
+    return jnp.einsum("sec,ecd->sd", combine, ye)            # (S, D)
+
+
+def moe_ffn(cfg: ArchConfig, x: jnp.ndarray, w: Params) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D).  Groups tokens to bound dispatch memory."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(cfg.moe_group or MOE_GROUP, T)
+    while T % g:
+        g -= 1
+    xg = x.reshape(T // g, g, D)
+    yg = jax.vmap(lambda t: _dispatch_one_group(cfg, t, w))(xg)
+    return yg.reshape(B, S, D)
+
+
+def router_load_balance_loss(cfg: ArchConfig, x: jnp.ndarray, w: Params) -> jnp.ndarray:
+    """Switch-style auxiliary load-balance loss (mean over layers is applied
+    by the training loop when enabled)."""
+    T = x.shape[0] * x.shape[1]
+    logits = x.reshape(T, -1).astype(jnp.float32) @ w["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    imp = jnp.mean(probs, axis=0)                            # (E,)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, axis=-1), cfg.n_experts)
+    load = jnp.mean(top1, axis=0)
+    return cfg.n_experts * jnp.sum(imp * load)

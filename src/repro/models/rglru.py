@@ -1,0 +1,343 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+[arXiv:2402.19427].
+
+Repeating layer pattern ("rec", "rec", "local"): two recurrent residual
+blocks followed by one local (sliding-window, kv=1 MQA) attention block.
+Every residual block is temporal-mix + GeGLU MLP with pre-RMSNorm.
+
+RG-LRU recurrence (diagonal, per channel; c = 8):
+
+    r_t = sigmoid(W_rg xb_t)            # recurrence gate
+    i_t = sigmoid(W_ig xb_t)            # input gate
+    log a_t = c * r_t * logsigmoid(Lambda)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xb_t)
+
+Training evaluates the recurrence with ``jax.lax.associative_scan`` (the
+linear recurrence composes associatively), which parallelizes over time --
+the TPU-native alternative to a sequential CUDA scan kernel (DESIGN.md
+Sec. 3).  Decode is one step, so the hybrid runs long_500k.
+
+Layer stacking: the pattern repeats ``L // 3`` times and is scanned
+block-wise; the ``L % 3`` leftover layers run unscanned (at most 2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    apply_rope, attention, decode_attention, repeat_kv, rms_norm,
+)
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "init_params", "forward", "forward_hidden", "init_cache", "decode_step",
+    "HybridCache", "param_group_shapes",
+]
+
+_LRU_C = 8.0
+
+
+class HybridCache(NamedTuple):
+    # attention layers (one stack):
+    k: jnp.ndarray         # (La, B, S, KV, hd)
+    v: jnp.ndarray         # (La, B, S, KV, hd)
+    # recurrent layers (one stack):
+    h: jnp.ndarray         # (Lr, B, R) LRU state
+    conv: jnp.ndarray      # (Lr, B, cw-1, R) conv tail
+    length: jnp.ndarray    # () int32
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int]:
+    return cfg.d_model, cfg.d_rnn or cfg.d_model
+
+
+def _counts(cfg: ArchConfig) -> Tuple[int, int]:
+    kinds = cfg.layer_kinds()
+    n_rec = sum(k == "rec" for k in kinds)
+    return n_rec, len(kinds) - n_rec
+
+
+def _init_mlp(cfg, key, L):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "ln_mlp": jnp.zeros((L, D), dt),
+        "mlp_wgate": jax.random.normal(k1, (L, D, F), dt) * s,
+        "mlp_win": jax.random.normal(k2, (L, D, F), dt) * s,
+        "mlp_wout": jax.random.normal(k3, (L, F, D), dt) * (1.0 / math.sqrt(F)),
+    }
+
+
+def _init_rec(cfg: ArchConfig, key: jax.Array, L: int) -> Params:
+    D, R = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    sr = 1.0 / math.sqrt(R)
+    p = {
+        "ln": jnp.zeros((L, D), dt),
+        "w_y": jax.random.normal(ks[0], (L, D, R), dt) * s,
+        "w_x": jax.random.normal(ks[1], (L, D, R), dt) * s,
+        "conv_k": jax.random.normal(ks[2], (L, cfg.conv_width, R), dt) * 0.1,
+        "w_rg": jax.random.normal(ks[3], (L, R, R), dt) * sr,
+        "w_ig": jax.random.normal(ks[4], (L, R, R), dt) * sr,
+        "lru_lambda": jnp.full((L, R), 3.0, jnp.float32),   # a ~ sigmoid(3)
+        "w_o": jax.random.normal(ks[5], (L, R, D), dt) * sr,
+    }
+    p.update(_init_mlp(cfg, ks[6], L))
+    return p
+
+
+def _init_attn(cfg: ArchConfig, key: jax.Array, L: int) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "ln": jnp.zeros((L, D), dt),
+        "wq": jax.random.normal(ks[0], (L, D, H * hd), dt) * s,
+        "wk": jax.random.normal(ks[1], (L, D, KV * hd), dt) * s,
+        "wv": jax.random.normal(ks[2], (L, D, KV * hd), dt) * s,
+        "wo": jax.random.normal(ks[3], (L, H * hd, D), dt) * (1.0 / math.sqrt(H * hd)),
+    }
+    p.update(_init_mlp(cfg, ks[4], L))
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    n_rec, n_attn = _counts(cfg)
+    kE, kR, kA, kH = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    D, V = cfg.d_model, cfg.vocab
+    params = {
+        "embed": jax.random.normal(kE, (V, D), dt) * 0.02,
+        "rec": _init_rec(cfg, kR, n_rec),
+        "attn": _init_attn(cfg, kA, n_attn),
+        "ln_f": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(kH, (D, V), dt) / math.sqrt(D)
+    return params
+
+
+def _geglu(w: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    h = rms_norm(x, w["ln_mlp"], eps)
+    y = jax.nn.gelu((h @ w["mlp_wgate"]).astype(jnp.float32), approximate=True)
+    return x + (y.astype(x.dtype) * (h @ w["mlp_win"])) @ w["mlp_wout"]
+
+
+def _causal_conv(xb: jnp.ndarray, kern: jnp.ndarray, tail: jnp.ndarray | None):
+    """Depthwise causal conv1d.  xb: (B, T, R); kern: (cw, R);
+    tail: (B, cw-1, R) previous context or None (zeros)."""
+    cw = kern.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xb.shape[0], cw - 1, xb.shape[2]), xb.dtype)
+    xp = jnp.concatenate([tail, xb], axis=1)                 # (B, T+cw-1, R)
+    out = sum(xp[:, i : i + xb.shape[1], :] * kern[i] for i in range(cw))
+    return out, xp[:, -(cw - 1):, :] if cw > 1 else tail
+
+
+def _lru_scan(log_a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray | None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over T.
+    log_a, bx: (B, T, R) f32.  h0: (B, R) initial state or None."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def _rec_temporal(cfg, w, x, h0, conv_tail, eps):
+    """RG-LRU temporal block.  Returns (out, h_T, conv_tail)."""
+    D, R = _dims(cfg)
+    hN = rms_norm(x, w["ln"], eps)
+    y = jax.nn.gelu((hN @ w["w_y"]).astype(jnp.float32), approximate=True)
+    xb = hN @ w["w_x"]
+    xb, new_tail = _causal_conv(xb, w["conv_k"], conv_tail)
+    xb32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xb32 @ w["w_rg"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xb32 @ w["w_ig"].astype(jnp.float32))
+    log_a = _LRU_C * r * jax.nn.log_sigmoid(w["lru_lambda"])
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xb32)
+    h = _lru_scan(log_a, b, h0)                               # (B, T, R)
+    out = (y * h).astype(x.dtype) @ w["w_o"]
+    return x + out, h[:, -1, :], new_tail
+
+
+def _attn_temporal(cfg, w, x, positions, eps):
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    hN = rms_norm(x, w["ln"], eps)
+    q = apply_rope((hN @ w["wq"]).reshape(B, T, H, hd), positions, cfg.rope_theta)
+    k = apply_rope((hN @ w["wk"]).reshape(B, T, KV, hd), positions, cfg.rope_theta)
+    v = (hN @ w["wv"]).reshape(B, T, KV, hd)
+    o = attention(q, repeat_kv(k, H // KV), repeat_kv(v, H // KV),
+                  causal=True, window=cfg.sliding_window, q_chunk=cfg.attn_chunk,
+                  unroll=cfg.attn_unroll)
+    return x + o.reshape(B, T, H * hd) @ w["wo"]
+
+
+def forward_hidden(cfg: ArchConfig, params: Params, tokens: jnp.ndarray, **_):
+    dt = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B, T = tokens.shape
+    D, R = _dims(cfg)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(D), dt)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    kinds = cfg.layer_kinds()
+    pat = cfg.pattern
+    n_blocks = cfg.n_layers // len(pat)
+    rec_per_block = sum(k == "rec" for k in pat)
+    attn_per_block = len(pat) - rec_per_block
+
+    def take(stack, i, cnt):
+        return jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(a, i, cnt, 0), stack)
+
+    def block(xc, idx):
+        ri, ai = idx * rec_per_block, idx * attn_per_block
+        j_r, j_a = 0, 0
+        for kind in pat:
+            if kind == "rec":
+                w = jax.tree.map(lambda a: a[0], take(params["rec"], ri + j_r, 1))
+                xc, _, _ = _rec_temporal(cfg, w, xc, None, None, eps)
+                xc = _geglu(w, xc, eps)
+                j_r += 1
+            else:
+                w = jax.tree.map(lambda a: a[0], take(params["attn"], ai + j_a, 1))
+                xc = _attn_temporal(cfg, w, xc, positions, eps)
+                xc = _geglu(w, xc, eps)
+                j_a += 1
+        return xc, None
+
+    body = block
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, jnp.arange(n_blocks), unroll=cfg.scan_unroll)
+
+    # leftover layers (pattern prefix), unscanned -- at most len(pat)-1
+    n_rec_used = n_blocks * rec_per_block
+    n_attn_used = n_blocks * attn_per_block
+    for kind in kinds[n_blocks * len(pat):]:
+        if kind == "rec":
+            w = jax.tree.map(lambda a: a[n_rec_used], params["rec"])
+            x, _, _ = _rec_temporal(cfg, w, x, None, None, eps)
+            x = _geglu(w, x, eps)
+            n_rec_used += 1
+        else:
+            w = jax.tree.map(lambda a: a[n_attn_used], params["attn"])
+            x = _attn_temporal(cfg, w, x, positions, eps)
+            x = _geglu(w, x, eps)
+            n_attn_used += 1
+
+    x = rms_norm(x, params["ln_f"], eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x, head
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray, **kw) -> jnp.ndarray:
+    x, head = forward_hidden(cfg, params, tokens, **kw)
+    return (x @ head).astype(jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, length=0) -> HybridCache:
+    dt = jnp.dtype(cfg.dtype)
+    n_rec, n_attn = _counts(cfg)
+    D, R = _dims(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    # local layers only ever see ``sliding_window`` keys; cap the cache there
+    s_attn = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return HybridCache(
+        k=jnp.zeros((n_attn, batch, s_attn, KV, hd), dt),
+        v=jnp.zeros((n_attn, batch, s_attn, KV, hd), dt),
+        h=jnp.zeros((n_rec, batch, R), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, cfg.conv_width - 1, R), dt),
+        length=jnp.asarray(length, jnp.int32),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: HybridCache,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, HybridCache]:
+    """One token.  Local-attention caches are ring buffers of size window."""
+    dt = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    B = tokens.shape[0]
+    D, R = _dims(cfg)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(D), dt)
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
+    S_buf = cache.k.shape[2]
+    slot = cache.length % S_buf
+
+    kinds = cfg.layer_kinds()
+    k_all, v_all = cache.k, cache.v
+    h_all, conv_all = cache.h, cache.conv
+    ri = ai = 0
+    for kind in kinds:
+        if kind == "rec":
+            w = jax.tree.map(lambda a: a[ri], params["rec"])
+            x, h_new, tail = _rec_temporal(
+                cfg, w, x, h_all[ri], conv_all[ri], eps
+            )
+            x = _geglu(w, x, eps)
+            h_all = h_all.at[ri].set(h_new)
+            conv_all = conv_all.at[ri].set(tail)
+            ri += 1
+        else:
+            w = jax.tree.map(lambda a: a[ai], params["attn"])
+            hN = rms_norm(x, w["ln"], eps)
+            q = apply_rope((hN @ w["wq"]).reshape(B, 1, H, hd), pos, cfg.rope_theta)
+            k = apply_rope((hN @ w["wk"]).reshape(B, 1, KV, hd), pos, cfg.rope_theta)
+            v = (hN @ w["wv"]).reshape(B, 1, KV, hd)
+            kc = jax.lax.dynamic_update_slice(k_all[ai], k, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(v_all[ai], v, (0, slot, 0, 0))
+            valid = jnp.minimum(cache.length + 1, S_buf)
+            o = decode_attention(q, repeat_kv(kc, H // KV), repeat_kv(vc, H // KV),
+                                 valid, window=0)
+            x = x + o.reshape(B, 1, H * hd) @ w["wo"]
+            x = _geglu(w, x, eps)
+            k_all = k_all.at[ai].set(kc)
+            v_all = v_all.at[ai].set(vc)
+            ai += 1
+    x = rms_norm(x, params["ln_f"], eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head).astype(jnp.float32)
+    return logits, HybridCache(k=k_all, v=v_all, h=h_all, conv=conv_all,
+                               length=cache.length + 1)
+
+
+def param_group_shapes(cfg: ArchConfig):
+    n_rec, n_attn = _counts(cfg)
+    D, R = _dims(cfg)
+    F, H, KV, hd, V = cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.vocab
+    g = {
+        "rec/w_y": ((D, R), n_rec), "rec/w_x": ((D, R), n_rec),
+        "rec/w_rg": ((R, R), n_rec), "rec/w_ig": ((R, R), n_rec),
+        "rec/w_o": ((R, D), n_rec),
+        "rec/mlp_wgate": ((D, F), n_rec), "rec/mlp_win": ((D, F), n_rec),
+        "rec/mlp_wout": ((F, D), n_rec),
+        "attn/wq": ((D, H * hd), n_attn), "attn/wk": ((D, KV * hd), n_attn),
+        "attn/wv": ((D, KV * hd), n_attn), "attn/wo": ((H * hd, D), n_attn),
+        "attn/mlp_wgate": ((D, F), n_attn), "attn/mlp_win": ((D, F), n_attn),
+        "attn/mlp_wout": ((F, D), n_attn),
+        "embed": ((V, D), 1),
+    }
+    if not cfg.tie_embeddings:
+        g["head"] = ((D, V), 1)
+    return g

@@ -1,0 +1,240 @@
+"""RWKV-6 "Finch" -- attention-free RNN with data-dependent decay
+[arXiv:2404.05892].
+
+Per layer: a *time-mix* block (the WKV6 linear recurrence) and a
+*channel-mix* block (token-shifted squared-ReLU FFN).
+
+Time-mix recurrence per head (state S in R^{hd x hd}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with per-channel data-dependent decay ``w_t = exp(-exp(w0 + lora(x_t)))``
+(kept in log-space for stability) and the "bonus" ``u`` for the current
+token.  Token-shift mixing (DDLerp) interpolates each projection input
+between x_t and x_{t-1} with a data-dependent coefficient.
+
+Training-mode evaluation scans over time steps (state (B, H, hd, hd)); this
+is the memory-light baseline.  The §Perf hillclimb evaluates a chunked
+matmul formulation against it (see EXPERIMENTS.md).  Decode is a single
+recurrence step -- O(1) in context length, which is why rwkv6 runs the
+long_500k shape that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import layer_norm, rms_norm
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "init_params", "forward", "forward_hidden", "init_cache", "decode_step",
+    "RWKVCache", "param_group_shapes", "time_mix_seq",
+]
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+class RWKVCache(NamedTuple):
+    tm_x: jnp.ndarray      # (L, B, D) last input to time-mix
+    cm_x: jnp.ndarray      # (L, B, D) last input to channel-mix
+    S: jnp.ndarray         # (L, B, H, hd, hd) wkv state
+    length: jnp.ndarray    # () int32
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    D, F, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    H, hd = _heads(cfg)
+    lora = cfg.time_decay_extra_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 20)
+    s = 1.0 / math.sqrt(D)
+    layers = {
+        "ln1_w": jnp.ones((L, D), dt), "ln1_b": jnp.zeros((L, D), dt),
+        "ln2_w": jnp.ones((L, D), dt), "ln2_b": jnp.zeros((L, D), dt),
+        # token-shift DDLerp: base mix + per-stream mus + shared lora
+        "mix_base": jnp.zeros((L, D), dt),
+        "mix_mus": jnp.zeros((L, len(_MIX_NAMES), D), dt),
+        "mix_w1": jax.random.normal(ks[0], (L, D, 32 * len(_MIX_NAMES)), dt) * s,
+        "mix_w2": jax.random.normal(ks[1], (L, len(_MIX_NAMES), 32, D), dt) * 0.02,
+        # time-mix projections
+        "tm_wr": jax.random.normal(ks[2], (L, D, D), dt) * s,
+        "tm_wk": jax.random.normal(ks[3], (L, D, D), dt) * s,
+        "tm_wv": jax.random.normal(ks[4], (L, D, D), dt) * s,
+        "tm_wg": jax.random.normal(ks[5], (L, D, D), dt) * s,
+        "tm_wo": jax.random.normal(ks[6], (L, D, D), dt) * s,
+        # data-dependent decay lora + base, and bonus u
+        "decay_w0": jnp.full((L, D), -6.0, dt),
+        "decay_w1": jax.random.normal(ks[7], (L, D, lora), dt) * s,
+        "decay_w2": jax.random.normal(ks[8], (L, lora, D), dt) * 0.02,
+        "bonus_u": jnp.zeros((L, H, hd), dt),
+        # per-head group-norm of the wkv output
+        "tm_ln_w": jnp.ones((L, D), dt), "tm_ln_b": jnp.zeros((L, D), dt),
+        # channel-mix
+        "cm_mix_k": jnp.zeros((L, D), dt),
+        "cm_mix_r": jnp.zeros((L, D), dt),
+        "cm_wk": jax.random.normal(ks[9], (L, D, F), dt) * s,
+        "cm_wv": jax.random.normal(ks[10], (L, F, D), dt) * (1.0 / math.sqrt(F)),
+        "cm_wr": jax.random.normal(ks[11], (L, D, D), dt) * s,
+    }
+    return {
+        "embed": jax.random.normal(ks[12], (V, D), dt) * 0.02,
+        "layers": layers,
+        "ln_f_w": jnp.ones((D,), dt), "ln_f_b": jnp.zeros((D,), dt),
+        "head": jax.random.normal(ks[13], (D, V), dt) * s,
+    }
+
+
+def _ddlerp(w: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent token-shift: returns the 5 mixed inputs (r,k,v,w,g)."""
+    sx = x_prev - x                                           # (B, T, D)
+    base = x + sx * w["mix_base"]
+    lora = jnp.tanh(base @ w["mix_w1"])                       # (B, T, 32*5)
+    B, T = x.shape[0], x.shape[1]
+    lora = lora.reshape(B, T, len(_MIX_NAMES), 32)
+    dyn = jnp.einsum("btsi,sid->btsd", lora, w["mix_w2"])     # (B, T, 5, D)
+    mus = w["mix_mus"][None, None]                            # (1, 1, 5, D)
+    mixed = x[:, :, None, :] + sx[:, :, None, :] * (mus + dyn)
+    return tuple(mixed[:, :, i, :] for i in range(len(_MIX_NAMES)))
+
+
+def _decay_log(w: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """log(w_t) = -exp(w0 + lora(xw)) in f32; always < 0."""
+    lo = jnp.tanh(xw @ w["decay_w1"]) @ w["decay_w2"]
+    return -jnp.exp((w["decay_w0"] + lo).astype(jnp.float32))
+
+
+def time_mix_seq(
+    cfg: ArchConfig, w: Params, x: jnp.ndarray, x_last: jnp.ndarray,
+    S0: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """WKV6 over a sequence.  x: (B, T, D); S0: (B, H, hd, hd).
+    Returns (out (B, T, D), x_tail (B, D), S_T)."""
+    B, T, D = x.shape
+    H, hd = _heads(cfg)
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(w, x, x_prev)
+
+    r = (xr @ w["tm_wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ w["tm_wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ w["tm_wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ w["tm_wg"])
+    logw = _decay_log(w, xw).reshape(B, T, H, hd)             # f32, < 0
+    u = w["bonus_u"].astype(jnp.float32)                      # (H, hd)
+
+    def step(S, rkvw):
+        rt, kt, vt, lwt = rkvw                                # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B, H, hd, hd)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, ot
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    S_T, o = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    o = o.transpose(1, 0, 2, 3).reshape(B, T, D)              # (B, T, D)
+
+    o = layer_norm(o, w["tm_ln_w"], w["tm_ln_b"])             # per-channel GN
+    o = (o * g).astype(x.dtype) @ w["tm_wo"]
+    return o, x[:, -1, :], S_T.astype(S0.dtype)
+
+
+def _channel_mix(w: Params, x: jnp.ndarray, x_last: jnp.ndarray):
+    B, T, D = x.shape
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (x_prev - x) * w["cm_mix_k"]
+    xr = x + (x_prev - x) * w["cm_mix_r"]
+    kk = jnp.square(jax.nn.relu(xk @ w["cm_wk"]))
+    return jax.nn.sigmoid(xr @ w["cm_wr"]) * (kk @ w["cm_wv"]), x[:, -1, :]
+
+
+def _layer(cfg: ArchConfig, x, w, tm_x0, cm_x0, S0):
+    h = layer_norm(x, w["ln1_w"], w["ln1_b"])
+    o, tm_tail, S = time_mix_seq(cfg, w, h, tm_x0, S0)
+    x = x + o
+    h = layer_norm(x, w["ln2_w"], w["ln2_b"])
+    o, cm_tail = _channel_mix(w, h, cm_x0)
+    return x + o, tm_tail, cm_tail, S
+
+
+def forward_hidden(cfg: ArchConfig, params: Params, tokens: jnp.ndarray, **_):
+    dt = jnp.dtype(cfg.dtype)
+    B, T = tokens.shape
+    H, hd = _heads(cfg)
+    x = params["embed"][tokens].astype(dt)
+    zeros_x = jnp.zeros((B, cfg.d_model), dt)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def body(xc, w):
+        out, _, _, _ = _layer(cfg, xc, w, zeros_x, zeros_x, S0)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    return x, params["head"]
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray, **_) -> jnp.ndarray:
+    x, head = forward_hidden(cfg, params, tokens)
+    return (x @ head).astype(jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, length=0) -> RWKVCache:
+    dt = jnp.dtype(cfg.dtype)
+    H, hd = _heads(cfg)
+    L, D = cfg.n_layers, cfg.d_model
+    return RWKVCache(
+        tm_x=jnp.zeros((L, batch, D), dt),
+        cm_x=jnp.zeros((L, batch, D), dt),
+        S=jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        length=jnp.asarray(length, jnp.int32),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: RWKVCache,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, RWKVCache]:
+    dt = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(dt)      # (B, 1, D)
+
+    def body(xc, lw):
+        w, tm_x0, cm_x0, S0 = lw
+        out, tm, cm, S = _layer(cfg, xc, w, tm_x0, cm_x0, S0)
+        return out, (tm, cm, S)
+
+    x, (tm, cm, S) = jax.lax.scan(
+        body, x, (params["layers"], cache.tm_x, cache.cm_x, cache.S)
+    )
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, RWKVCache(tm_x=tm, cm_x=cm, S=S, length=cache.length + 1)
+
+
+def param_group_shapes(cfg: ArchConfig):
+    D, F, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    H, hd = _heads(cfg)
+    lora = cfg.time_decay_extra_dim
+    return {
+        "layers/tm_wr": ((D, D), L), "layers/tm_wk": ((D, D), L),
+        "layers/tm_wv": ((D, D), L), "layers/tm_wg": ((D, D), L),
+        "layers/tm_wo": ((D, D), L),
+        "layers/cm_wk": ((D, F), L), "layers/cm_wv": ((F, D), L),
+        "layers/cm_wr": ((D, D), L),
+        "layers/decay_w1": ((D, lora), L), "layers/decay_w2": ((lora, D), L),
+        "layers/mix_w1": ((D, 32 * 5), L),
+        "embed": ((V, D), 1), "head": ((D, V), 1),
+        "layers/ln1_w": ((D,), L),
+    }

@@ -1,0 +1,12 @@
+"""Optimizers and LR schedules (pure JAX, no external deps).
+
+FedAvg's client optimizer is plain SGD (paper Sec. IV); the server applies
+the averaged update with a server learning rate (1.0 = vanilla FedAvg,
+momentum > 0 = FedAvgM).  Adam is provided for the centralized-training
+driver and ablations.
+"""
+
+from .optimizers import OptState, adam, sgd
+from .schedules import constant, cosine_decay, linear_warmup
+
+__all__ = ["OptState", "sgd", "adam", "constant", "cosine_decay", "linear_warmup"]

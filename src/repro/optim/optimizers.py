@@ -1,0 +1,93 @@
+"""SGD (+momentum) and Adam as (init, update) pure-function pairs.
+
+update(grads, state, params) -> (new_params, new_state); learning rate may be
+a float or a callable step -> lr evaluated inside (schedule support).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "sgd", "adam"]
+
+Params = Any
+LR = "float | Callable[[jnp.ndarray], jnp.ndarray]"
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    slots: Any                      # optimizer-specific pytree(s)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False):
+    """Plain / momentum SGD."""
+
+    def init(params: Params) -> OptState:
+        slots = (
+            jax.tree.map(jnp.zeros_like, params) if momentum else None
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), slots=slots)
+
+    def update(grads: Params, state: OptState, params: Params) -> Tuple[Params, OptState]:
+        step_lr = _lr_at(lr, state.step)
+
+        if momentum:
+            vel = jax.tree.map(lambda v, g: momentum * v + g, state.slots, grads)
+            eff = (
+                jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+                if nesterov else vel
+            )
+            new = jax.tree.map(
+                lambda p, e: (p.astype(jnp.float32) - step_lr * e.astype(jnp.float32)).astype(p.dtype),
+                params, eff,
+            )
+            return new, OptState(step=state.step + 1, slots=vel)
+
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - step_lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new, OptState(step=state.step + 1, slots=None)
+
+    return init, update
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    """AdamW (decoupled weight decay when weight_decay > 0).
+
+    Moments are stored in f32 regardless of parameter dtype."""
+
+    def init(params: Params) -> OptState:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            slots=(jax.tree.map(zeros32, params), jax.tree.map(zeros32, params)),
+        )
+
+    def update(grads: Params, state: OptState, params: Params) -> Tuple[Params, OptState]:
+        m, v = state.slots
+        t = state.step + 1
+        step_lr = _lr_at(lr, state.step)
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32), m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * jnp.square(g.astype(jnp.float32)), v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            upd_ = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * upd_).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, OptState(step=t, slots=(m, v))
+
+    return init, update

@@ -1,0 +1,28 @@
+"""Learning-rate schedules as step -> lr callables."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "cosine_decay"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps else 1.0
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+    return fn

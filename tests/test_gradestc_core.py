@@ -1,0 +1,170 @@
+"""Unit tests for the GradESTC compressor/decompressor (Algorithms 1-2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gradestc as ge
+from repro.core.rsvd import randomized_svd
+
+
+def _drifting_stream(rng, l, m, k, steps, drift, noise=0.01):
+    """Synthetic gradients on a slowly rotating rank-k subspace."""
+    U = np.linalg.qr(rng.normal(size=(l, k)))[0]
+    for _ in range(steps):
+        U = np.linalg.qr(U + drift * rng.normal(size=(l, k)))[0]
+        yield jnp.asarray(
+            U @ rng.normal(size=(k, m)) + noise * rng.normal(size=(l, m)),
+            jnp.float32,
+        )
+
+
+class TestCompressInit:
+    def test_basis_orthonormal(self, rng, key):
+        l, m, k = 96, 64, 8
+        G = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st = ge.init_compressor(l, k, key)
+        st, payload, stats = ge.compress_init(st, G, k=k)
+        MtM = np.asarray(st.M.T @ st.M)
+        np.testing.assert_allclose(MtM, np.eye(k), atol=1e-4)
+        assert int(stats.d_r) == k
+        assert bool(payload.init)
+
+    def test_init_reconstruction_matches_best_rank_k(self, rng, key):
+        """Init compression error should be close to the optimal rank-k error."""
+        l, m, k = 128, 96, 8
+        # exactly rank-k matrix -> near-zero error
+        A = rng.normal(size=(l, k)) @ rng.normal(size=(k, m))
+        G = jnp.asarray(A, jnp.float32)
+        st = ge.init_compressor(l, k, key)
+        st, payload, stats = ge.compress_init(st, G, k=k)
+        assert float(stats.recon_err) < 1e-3
+
+
+class TestCompressUpdate:
+    def test_orthonormality_preserved_across_rounds(self, rng, key):
+        l, m, k, d = 96, 64, 8, 4
+        st = ge.init_compressor(l, k, key)
+        for t, G in enumerate(_drifting_stream(rng, l, m, k, 8, 0.05)):
+            if t == 0:
+                st, payload, stats = ge.compress_init(st, G, k=k)
+            else:
+                st, payload, stats = ge.compress_update(st, G, k=k, d=d)
+            MtM = np.asarray(st.M.T @ st.M)
+            np.testing.assert_allclose(MtM, np.eye(k), atol=5e-4)
+
+    def test_error_basis_orthogonal_to_M(self, rng, key):
+        """Formula 9: candidates from the fitting error are orthogonal to M."""
+        l, m, k, d = 128, 96, 8, 4
+        G = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st = ge.init_compressor(l, k, key)
+        st, _, _ = ge.compress_init(st, G, k=k)
+        M = st.M
+        G2 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        A = M.T @ G2
+        E = G2 - M @ A
+        U, S, Vt = randomized_svd(jax.random.PRNGKey(7), E, rank=d)
+        cross = np.asarray(M.T @ U)
+        assert np.abs(cross).max() < 1e-3
+
+    def test_low_drift_keeps_basis(self, rng, key):
+        """Temporal correlation -> few replacements (the paper's premise)."""
+        l, m, k, d = 128, 96, 8, 8
+        st = ge.init_compressor(l, k, key)
+        total_repl = 0
+        for t, G in enumerate(_drifting_stream(rng, l, m, k, 10, 0.002)):
+            if t == 0:
+                st, _, stats = ge.compress_init(st, G, k=k)
+            else:
+                st, _, stats = ge.compress_update(st, G, k=k, d=d)
+                total_repl += int(stats.d_r)
+        assert total_repl <= 2 * 9   # far fewer than k per round
+
+    def test_high_drift_triggers_replacement(self, rng, key):
+        l, m, k, d = 128, 96, 8, 8
+        st = ge.init_compressor(l, k, key)
+        total_repl = 0
+        for t, G in enumerate(_drifting_stream(rng, l, m, k, 10, 0.3)):
+            if t == 0:
+                st, _, stats = ge.compress_init(st, G, k=k)
+            else:
+                st, _, stats = ge.compress_update(st, G, k=k, d=d)
+                total_repl += int(stats.d_r)
+        assert total_repl > 9       # replacements happen
+
+    def test_reconstruction_error_bounded_by_projection(self, rng, key):
+        """recon_err equals the projection residual: ||G - M M^T G||/||G||."""
+        l, m, k, d = 96, 64, 8, 4
+        st = ge.init_compressor(l, k, key)
+        G0 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, _, _ = ge.compress_init(st, G0, k=k)
+        G1 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, payload, stats = ge.compress_update(st, G1, k=k, d=d)
+        Ghat = np.asarray(st.M @ payload.coeffs)
+        err = np.linalg.norm(np.asarray(G1) - Ghat) / np.linalg.norm(np.asarray(G1))
+        np.testing.assert_allclose(float(stats.recon_err), err, rtol=1e-3)
+
+
+class TestDecompressor:
+    def test_server_mirrors_client(self, rng, key):
+        """Alg. 2: the decompressor basis tracks the compressor exactly."""
+        l, m, k, d = 96, 64, 8, 4
+        st = ge.init_compressor(l, k, key)
+        dec = ge.DecompressorState(M=jnp.zeros((l, k)))
+        for t, G in enumerate(_drifting_stream(rng, l, m, k, 6, 0.1)):
+            if t == 0:
+                st, payload, _ = ge.compress_init(st, G, k=k)
+                dec, Ghat = ge.decompress(dec, payload, init_basis=st.M)
+            else:
+                st, payload, _ = ge.compress_update(st, G, k=k, d=d)
+                dec, Ghat = ge.decompress(dec, payload)
+            np.testing.assert_allclose(
+                np.asarray(dec.M), np.asarray(st.M), atol=1e-6
+            )
+            np.testing.assert_allclose(
+                np.asarray(Ghat), np.asarray(st.M @ payload.coeffs), atol=1e-5
+            )
+
+    def test_payload_carries_only_replaced_vectors(self, rng, key):
+        l, m, k, d = 96, 64, 8, 4
+        st = ge.init_compressor(l, k, key)
+        G0 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, _, _ = ge.compress_init(st, G0, k=k)
+        G1 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, payload, stats = ge.compress_update(st, G1, k=k, d=d)
+        d_r = int(stats.d_r)
+        nv = np.asarray(payload.new_vectors)
+        # slots beyond d_r are zero (never transmitted)
+        if d_r < d:
+            assert np.abs(nv[d_r:]).max() == 0.0
+        assert int(np.asarray(payload.replaced_mask).sum()) == d_r
+
+
+class TestDynamicD:
+    def test_formula13_bucketed(self):
+        assert ge.next_candidate_count(0, 32) == 1
+        assert ge.next_candidate_count(4, 32) == 8      # ceil(6.2) -> 8
+        assert ge.next_candidate_count(30, 32) == 32    # clipped to k
+        assert ge.next_candidate_count(10, 32, bucket=False) == 14
+
+    def test_monotone_in_dr(self):
+        prev = 0
+        for d_r in range(0, 33):
+            d = ge.next_candidate_count(d_r, 32)
+            assert d >= prev or d == 32
+            prev = max(prev, d)
+
+
+class TestPayloadAccounting:
+    def test_formula14(self, rng, key):
+        l, m, k, d = 96, 64, 8, 4
+        st = ge.init_compressor(l, k, key)
+        G0 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, p0, _ = ge.compress_init(st, G0, k=k)
+        assert int(ge.payload_scalars(p0, l=l, m=m, k=k)) == (k * l + k * m) * 4
+        G1 = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st, p1, s1 = ge.compress_update(st, G1, k=k, d=d)
+        d_r = int(s1.d_r)
+        expect = (k * m + d_r * l + d_r) * 4
+        assert int(ge.payload_scalars(p1, l=l, m=m, k=k)) == expect

@@ -1,0 +1,163 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gradestc as ge
+from repro.core.baselines import (
+    dequantize, quantize_stochastic, sign_compress, topk_compress, TopKState,
+)
+from repro.core.reshaping import (
+    choose_segment_length, matrix_to_tensor, reshape_to_matrix, segment, unsegment,
+)
+from repro.core.rsvd import randomized_svd
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def _matrix(draw, max_l=64, max_m=48):
+    l = draw(st.integers(4, max_l))
+    m = draw(st.integers(4, max_m))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+
+
+class TestReshapeRoundtrip:
+    @given(shape=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+           seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_tensor_matrix_roundtrip(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        t = jnp.asarray(rng.normal(size=tuple(shape)), jnp.float32)
+        G, orig, l = reshape_to_matrix(t)
+        back = matrix_to_tensor(G, orig)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(t))
+
+    @given(n_log=st.integers(2, 10), seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_segment_roundtrip(self, n_log, seed):
+        n = 2 ** n_log
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        l = choose_segment_length((n,))
+        G = segment(g, l)
+        np.testing.assert_array_equal(np.asarray(unsegment(G)), np.asarray(g))
+
+    @given(shape=st.lists(st.integers(2, 12), min_size=2, max_size=3))
+    @settings(**_SETTINGS)
+    def test_segment_length_divides(self, shape):
+        l = choose_segment_length(tuple(shape))
+        n = int(np.prod(shape))
+        assert n % l == 0 and 1 <= l <= n
+
+
+class TestCompressionInvariants:
+    @given(G=_matrix(), k=st.integers(2, 8))
+    @settings(**_SETTINGS)
+    def test_projection_never_increases_energy(self, G, k):
+        """||M M^T G|| <= ||G|| for any orthonormal M (energy_kept in [0,1])."""
+        k = min(k, min(G.shape) - 1)
+        st_ = ge.init_compressor(G.shape[0], k, jax.random.PRNGKey(0))
+        st_, payload, stats = ge.compress_init(st_, G, k=k)
+        assert -1e-4 <= float(stats.energy_kept) <= 1.0 + 1e-4
+        assert float(stats.recon_err) <= 1.0 + 1e-4
+
+    @given(G=_matrix(), k=st.integers(2, 6), seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_update_round_reconstruction_bounded(self, G, k, seed):
+        k = min(k, min(G.shape) - 1)
+        d = max(1, k // 2)
+        key = jax.random.PRNGKey(seed)
+        st_ = ge.init_compressor(G.shape[0], k, key)
+        st_, _, _ = ge.compress_init(st_, G, k=k)
+        rng = np.random.default_rng(seed)
+        G2 = G + jnp.asarray(0.1 * rng.normal(size=G.shape), jnp.float32)
+        st_, payload, stats = ge.compress_update(st_, G2, k=k, d=d)
+        # Theorem-1 style bound: residual energy <= total energy
+        assert float(stats.recon_err) <= 1.0 + 1e-4
+        # basis stays orthonormal
+        MtM = np.asarray(st_.M.T @ st_.M)
+        np.testing.assert_allclose(MtM, np.eye(k), atol=2e-3)
+
+
+class TestRSVD:
+    @given(seed=st.integers(0, 2**16), k=st.integers(1, 6))
+    @settings(**_SETTINGS)
+    def test_recovers_exact_low_rank(self, seed, k):
+        rng = np.random.default_rng(seed)
+        l, m = 48, 32
+        A = rng.normal(size=(l, k)) @ rng.normal(size=(k, m))
+        U, S, Vt = randomized_svd(jax.random.PRNGKey(seed), jnp.asarray(A, jnp.float32), rank=k)
+        recon = np.asarray(U) * np.asarray(S) @ np.asarray(Vt)
+        np.testing.assert_allclose(recon, A, atol=1e-2 * np.abs(A).max())
+
+    @given(G=_matrix(), k=st.integers(1, 6))
+    @settings(**_SETTINGS)
+    def test_singular_values_descending_nonneg(self, G, k):
+        k = min(k, min(G.shape))
+        _, S, _ = randomized_svd(jax.random.PRNGKey(0), G, rank=k)
+        s = np.asarray(S)
+        assert (s >= -1e-6).all()
+        assert (np.diff(s) <= 1e-5).all()
+
+
+class TestQuantization:
+    @given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8]),
+           scale=st.floats(0.01, 100.0))
+    @settings(**_SETTINGS)
+    def test_dequant_error_bound(self, seed, bits, scale):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(256,)) * scale, jnp.float32)
+        codes, s = quantize_stochastic(g, jax.random.PRNGKey(seed), bits)
+        gd = dequantize(codes, s, bits)
+        step = 2.0 * float(s) / ((1 << bits) - 1)
+        assert float(jnp.abs(gd - g).max()) <= step + 1e-5
+
+    @given(seed=st.integers(0, 2**12))
+    @settings(max_examples=10, deadline=None)
+    def test_stochastic_quant_unbiased(self, seed):
+        """E[dequant(quant(g))] == g -- averaged over many keys."""
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        acc = np.zeros(64)
+        n = 200
+        for i in range(n):
+            codes, s = quantize_stochastic(g, jax.random.PRNGKey(i), 4)
+            acc += np.asarray(dequantize(codes, s, 4))
+        step = 2.0 * float(s) / 15
+        np.testing.assert_allclose(acc / n, np.asarray(g), atol=3 * step / np.sqrt(n) + 1e-2)
+
+
+class TestTopK:
+    @given(seed=st.integers(0, 2**16), k=st.integers(1, 32))
+    @settings(**_SETTINGS)
+    def test_keeps_largest_and_memory_is_residual(self, seed, k):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        st_ = TopKState.init(64)
+        st2, ghat, sc = topk_compress(st_, g, k)
+        nz = np.flatnonzero(np.asarray(ghat))
+        assert len(nz) <= k
+        # memory + ghat == corrected signal
+        np.testing.assert_allclose(
+            np.asarray(st2.memory + ghat), np.asarray(g), atol=1e-6
+        )
+        # kept entries are the k largest by magnitude
+        mags = np.abs(np.asarray(g))
+        kept = set(nz.tolist())
+        topk = set(np.argsort(-mags)[:k].tolist())
+        assert kept <= topk or np.isclose(
+            mags[sorted(kept - topk)], sorted(mags[list(topk - kept)])
+        ).any() or kept == topk
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_sign_preserves_sign(self, seed):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        ghat, sc = sign_compress(g)
+        assert (np.sign(np.asarray(ghat)) == np.sign(np.asarray(g))).all()
