@@ -1,0 +1,115 @@
+"""Round-engine benchmark: fused single-program round vs per-client loop.
+
+Measures, at n_clients in {10, 50, 100} on the current backend:
+
+  * steady-state rounds/sec per engine (median per-round wall time after the
+    compile/warmup rounds -- ``FLResult.extra["round_wall_s"]``);
+  * measured host syncs per round (every device->host fetch in the FL
+    runtime goes through ``core.metrics.host_fetch``; the fused engine's
+    contract is exactly 1, the loop pays 2 per (client, compressed group));
+  * the fused-over-loop speedup.
+
+The model is deliberately tiny: the engines run *identical* math, so at
+equal compute the ratio isolates what this PR attacks -- per-client dispatch
+and host-sync overhead, which is what dominates FL simulation at the 100+
+client scale of the paper's comparisons.
+
+Emits ``BENCH_round_engine.json`` (committed at the repo root so the perf
+trajectory is tracked PR-over-PR).
+
+Usage:  PYTHONPATH=src python benchmarks/round_engine.py [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import metrics
+from repro.fl import FLConfig, run_fl
+from repro.models.config import ArchConfig
+
+CLIENT_COUNTS = (10, 50, 100)
+WARMUP_ROUNDS = 4          # covers init round + Formula-13 d re-bucketing compiles
+MEASURED_ROUNDS = 8
+
+
+def bench_arch() -> ArchConfig:
+    """Dispatch-bound regime: real transformer, minimal per-client compute."""
+    return ArchConfig(
+        name="fl-bench", family="dense", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=128, vocab=64, dtype="float32", remat=False,
+        attn_chunk=0,
+    )
+
+
+def bench_cfg(engine: str, n_clients: int) -> FLConfig:
+    return FLConfig(
+        method="gradestc", rounds=WARMUP_ROUNDS + MEASURED_ROUNDS,
+        n_clients=n_clients, local_steps=1, batch=1, seq=8,
+        eval_every=10 ** 9, seed=0, arch=bench_arch(), engine=engine,
+    )
+
+
+def measure(engine: str, n_clients: int) -> dict:
+    cfg = bench_cfg(engine, n_clients)
+    metrics.reset_host_sync_count()
+    res = run_fl(cfg)
+    syncs = metrics.host_sync_count()
+    wall = res.extra["round_wall_s"]
+    steady = float(np.median(wall[WARMUP_ROUNDS:]))
+    return {
+        "engine": res.extra["engine"],
+        "n_clients": n_clients,
+        "steady_round_ms": steady * 1e3,
+        "rounds_per_sec": 1.0 / steady,
+        "host_syncs_per_round": syncs / cfg.rounds,
+        "warmup_rounds": WARMUP_ROUNDS,
+        "measured_rounds": MEASURED_ROUNDS,
+        "total_wall_s": res.wall_s,
+        "final_eval_loss": res.eval_loss[-1],
+        "uplink_total_bytes": res.ledger.uplink_total,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).resolve()
+                                         .parent.parent / "BENCH_round_engine.json"))
+    ap.add_argument("--clients", type=int, nargs="*", default=list(CLIENT_COUNTS))
+    args = ap.parse_args(argv)
+
+    results, speedups = [], {}
+    for C in args.clients:
+        loop = measure("loop", C)
+        fused = measure("fused", C)
+        results += [loop, fused]
+        speedups[str(C)] = loop["steady_round_ms"] / fused["steady_round_ms"]
+        print(f"n_clients={C:4d}  loop {loop['steady_round_ms']:8.1f} ms/round "
+              f"({loop['host_syncs_per_round']:.1f} syncs)   "
+              f"fused {fused['steady_round_ms']:8.1f} ms/round "
+              f"({fused['host_syncs_per_round']:.1f} syncs)   "
+              f"speedup {speedups[str(C)]:.2f}x")
+
+    payload = {
+        "benchmark": "round_engine",
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "arch": dataclasses.asdict(bench_arch()),
+        "config": {"local_steps": 1, "batch": 1, "seq": 8, "method": "gradestc"},
+        "results": results,
+        "speedup_fused_over_loop": speedups,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -129,19 +129,32 @@ def compress_init(
 
 
 def compress_update(
-    state: CompressorState, G: jnp.ndarray, *, k: int, d: int
+    state: CompressorState, G: jnp.ndarray, *, k: int, d: int,
+    use_pallas: bool = False, pallas_interpret: bool | None = None,
 ) -> Tuple[CompressorState, Payload, CompressStats]:
     """Steady-state compression (Alg. 1 lines 9-29).
 
     ``d`` (number of candidate vectors from the fitting error) is static.
+
+    ``use_pallas`` routes the spatial projection + residual (``A = M^T G``,
+    ``E = G - M A`` -- the hot path feeding the rSVD) through the fused
+    Pallas kernel (``kernels/gradestc_encode.py``), which streams ``G``
+    from HBM once instead of twice; ``pallas_interpret=True`` runs the
+    kernel body in interpret mode (the CPU fallback).  Both are static
+    trace-time switches.
     """
     l, m = G.shape
     M = state.M
     key, sub = jax.random.split(state.key)
 
     # --- spatial projection onto the carried-over basis -------------------
-    A = M.T @ G                                   # (k, m)   Formula 4
-    E = G - M @ A                                 # (l, m)   Formula 6
+    if use_pallas:
+        from repro.kernels.ops import encode
+
+        A, E = encode(M, G, interpret=pallas_interpret)  # Formulas 4 + 6 fused
+    else:
+        A = M.T @ G                               # (k, m)   Formula 4
+        E = G - M @ A                             # (l, m)   Formula 6
 
     # --- candidates from the fitting error (orthogonal to M by Formula 9) -
     Ue, Se, Vte = randomized_svd(sub, E, rank=d)
@@ -191,7 +204,8 @@ def compress_update(
 
 
 def compress(
-    state: CompressorState, G: jnp.ndarray, *, k: int, d: int
+    state: CompressorState, G: jnp.ndarray, *, k: int, d: int,
+    use_pallas: bool = False, pallas_interpret: bool | None = None,
 ) -> Tuple[CompressorState, Payload, CompressStats, jnp.ndarray]:
     """Dispatch between init and update based on ``state.initialized``.
 
@@ -213,7 +227,8 @@ def compress(
         return st2, Payload(p.replaced_mask, nv, p.coeffs, p.d_r, p.init), s, st2.M
 
     def _update(st):
-        st2, p, s = compress_update(st, G, k=k, d=d)
+        st2, p, s = compress_update(st, G, k=k, d=d, use_pallas=use_pallas,
+                                    pallas_interpret=pallas_interpret)
         return st2, p, s, st2.M
 
     new_state, payload, stats, basis = jax.lax.cond(

@@ -18,7 +18,32 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
-__all__ = ["CommLedger", "bytes_h"]
+__all__ = ["CommLedger", "bytes_h", "host_fetch", "host_sync_count", "reset_host_sync_count"]
+
+
+#: Device->host transfer counter.  Every blocking fetch in the FL runtime is
+#: routed through :func:`host_fetch` so benchmarks can *measure* the per-round
+#: host-sync count instead of asserting it by inspection (DESIGN.md Sec. 8:
+#: the fused round engine's contract is exactly one fetch per round).
+_HOST_SYNCS = 0
+
+
+def host_fetch(x):
+    """Materialize a device value on the host, counting the sync."""
+    global _HOST_SYNCS
+    _HOST_SYNCS += 1
+    import numpy as _np
+
+    return _np.asarray(x)
+
+
+def host_sync_count() -> int:
+    return _HOST_SYNCS
+
+
+def reset_host_sync_count() -> None:
+    global _HOST_SYNCS
+    _HOST_SYNCS = 0
 
 
 def bytes_h(b: float) -> str:

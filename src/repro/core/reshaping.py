@@ -32,7 +32,27 @@ __all__ = [
     "choose_segment_length",
     "reshape_to_matrix",
     "matrix_to_tensor",
+    "pad_to_block",
 ]
+
+
+def pad_to_block(x: jnp.ndarray, multiple: int, axis: int = -1) -> Tuple[jnp.ndarray, int]:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
+
+    Returns ``(padded, original_size)``.  Shapes are resolved at trace time so
+    the pad amount is static; a no-op when already aligned.  Used to feed
+    arbitrary (l, m) gradient matrices to the 128-aligned Pallas kernels
+    (zero columns project to zero coefficients, so slicing the outputs back
+    to ``original_size`` is exact).
+    """
+    axis = axis % x.ndim
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
 
 
 def whdc_flatten(t: jnp.ndarray) -> jnp.ndarray:

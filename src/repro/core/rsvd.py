@@ -68,6 +68,13 @@ def randomized_svd(
 
     Returns:
       (U, S, Vt) with shapes (l, rank), (rank,), (rank, m).
+
+    The GradESTC hot path computes this over the fitting-error residual
+    ``E = G - M A`` that the fused Pallas encode kernel produces in the same
+    HBM pass as the coefficients (``core/gradestc.compress_update``); the
+    projections *inside* the sketch deliberately stay plain GEMMs -- the
+    fused kernel would also emit an (l, m) residual the sketch discards,
+    costing an extra GEMM plus an l*m write for nothing.
     """
     l, m = A.shape
     size = min(rank + n_oversample, m, l)

@@ -1,7 +1,10 @@
 """repro.fl -- federated-learning runtime.
 
   * compression -- uplink methods over model-update pytrees (GradESTC + baselines)
-  * simulation  -- benchmark-scale round loop with exact byte accounting
+  * simulation  -- benchmark-scale round runtime with exact byte accounting
+                   (entry point; dispatches between the two engines)
+  * engine      -- fused client-parallel round: one jitted XLA program per
+                   round, one host sync (DESIGN.md Sec. 8)
 
 The production SPMD round step (clients = mesh data-axis groups, compressed
 all-gather aggregation) lives in ``repro.launch``.

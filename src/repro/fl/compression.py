@@ -24,11 +24,12 @@ import numpy as np
 from repro.core import baselines as bl
 from repro.core import gradestc as ge
 from repro.core.error_feedback import EFState, ef_inject, ef_update
+from repro.core.metrics import host_fetch
 from repro.core.policy import CompressionPolicy, LayerPlan
 from repro.core.reshaping import matrix_to_tensor, reshape_to_matrix
 
 __all__ = [
-    "make_method",
+    "make_method", "client_layer_keys", "path_index",
     "FedAvgMethod", "TopKMethod", "FedPAQMethod", "SignSGDMethod",
     "FedQClipMethod", "SVDFedMethod", "GradESTCMethod",
 ]
@@ -208,6 +209,28 @@ def _rsvd_basis(key, G, k: int):
 # GradESTC (the paper) + ablation variants
 # --------------------------------------------------------------------------
 
+def path_index(policy: CompressionPolicy) -> Dict[str, int]:
+    """Stable group-name -> int map (sorted order) for PRNG key derivation."""
+    return {name: i for i, name in enumerate(sorted(policy.plans))}
+
+
+def client_layer_keys(seed: int, client, path_idx, L: int) -> jnp.ndarray:
+    """Per-(client, group) rSVD key stack, one key per stacked layer.
+
+    Derived with ``fold_in`` chains only -- NOT Python ``hash()``, whose
+    string hashing is salted by ``PYTHONHASHSEED`` and therefore differs
+    across processes.  ``client``/``path_idx`` may be traced int32 scalars,
+    so the same derivation runs inside the fused engine's jitted round and
+    in the host reference loop, producing identical streams.
+    """
+    if isinstance(client, int):
+        client &= 0xFFFFFFFF    # server-side codecs use client=-1
+    base = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), client), path_idx
+    )
+    return jax.random.split(base, L)
+
+
 def _to_matrices(v: jnp.ndarray, plan: LayerPlan) -> jnp.ndarray:
     """Stacked delta (L, *shape) (or (*shape,) for stack=1) -> (L, l, m)."""
     L = plan.stack
@@ -260,10 +283,15 @@ class GradESTCMethod:
         self.alpha, self.beta = alpha, beta
         self.ef = ef
         self.seed = seed
-        # per (client, group): basis stack, rng keys, current d, EF memory
+        self._path_idx = path_index(policy)
+        # per (client, group): basis stack, rng keys, EF memory
         self.M: Dict[Tuple[int, str], jnp.ndarray] = {}
         self.keys: Dict[Tuple[int, str], jnp.ndarray] = {}
-        self.d: Dict[Tuple[int, str], int] = {}
+        # candidate count d is per *group*, shared by all clients (matching
+        # the fused engine's single static d per compiled round); Formula 13
+        # re-buckets it at end_round() from the round's max d_r.
+        self.d: Dict[str, int] = {}
+        self._round_drmax: Dict[str, int] = {}
         self.efmem: Dict[Tuple[int, str], jnp.ndarray] = {}
         self.sum_d = 0          # computational-overhead proxy (Table IV)
         self.last_err: Dict[str, float] = {}
@@ -271,8 +299,9 @@ class GradESTCMethod:
     def _keys_for(self, client: int, path: str, L: int):
         kk = (client, path)
         if kk not in self.keys:
-            base = jax.random.PRNGKey(hash((self.seed, client, path)) % (2**31))
-            self.keys[kk] = jax.random.split(base, L)
+            self.keys[kk] = client_layer_keys(
+                self.seed, client, self._path_idx[path], L
+            )
         return self.keys[kk]
 
     def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
@@ -297,7 +326,7 @@ class GradESTCMethod:
                 M, keys2, Ghat, d_r = _ge_init_group(keys, GL, k)
                 self.M[kk], self.keys[kk] = M, keys2
                 scalars += plan.init_scalars
-                self.d[kk] = max(1, k // 4)
+                self.d.setdefault(path, max(1, k // 4))
                 self.sum_d += k * L
             elif self.variant == "first":
                 M = self.M[kk]
@@ -305,25 +334,34 @@ class GradESTCMethod:
                 Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
                 scalars += plan.k * plan.m * L
             else:
-                d = k if self.variant == "k" else self.d[kk]
+                d = k if self.variant == "k" else self.d[path]
                 M2, keys2, Ghat, d_r, err = _ge_update_group(
                     self.M[kk], keys, GL, k, d
                 )
                 self.M[kk], self.keys[kk] = M2, keys2
                 self.sum_d += d * L
-                dr_arr = np.asarray(d_r)
+                dr_arr = host_fetch(d_r)
                 scalars += float(np.sum(plan.k * plan.m + dr_arr * plan.l + dr_arr))
-                self.last_err[path] = float(jnp.mean(err))
+                self.last_err[path] = float(host_fetch(jnp.mean(err)))
                 if self.variant == "full":
-                    d_next = ge.next_candidate_count(
-                        int(dr_arr.max()), k, self.alpha, self.beta
+                    self._round_drmax[path] = max(
+                        self._round_drmax.get(path, 0), int(dr_arr.max())
                     )
-                    self.d[kk] = d_next
 
             if self.ef:
                 self.efmem[kk] = GL - Ghat
             recon[path] = _from_matrices(Ghat, plan, v.shape).astype(v.dtype)
         return recon, scalars
+
+    def end_round(self):
+        """Formula 13 on the round's max d_r per group -- the same shared-d
+        re-bucketing decision the fused engine takes from its single packed
+        host transfer."""
+        for path, drmax in self._round_drmax.items():
+            self.d[path] = ge.next_candidate_count(
+                drmax, self.policy.plans[path].k, self.alpha, self.beta
+            )
+        self._round_drmax = {}
 
 
 def make_method(name: str, policy: Optional[CompressionPolicy] = None, **kw):

@@ -6,6 +6,17 @@ SGD steps before uploading its model delta through the configured uplink
 compression method; the server averages reconstructed deltas and applies
 them with a server learning rate (1.0 = FedAvg).
 
+Two round engines share this entry point (DESIGN.md Sec. 8):
+
+* ``engine="fused"`` (default) -- the client-parallel single-XLA-program
+  round in ``repro/fl/engine.py``: local training vmapped over clients,
+  stacked GradESTC state, in-jit aggregation, one host sync per round.
+* ``engine="loop"``  -- the per-client Python reference loop below, kept as
+  the parity oracle (identical math, one dispatch per client per group).
+
+Methods the fused engine does not cover (the per-tensor baselines, downlink
+compression) fall back to the loop automatically.
+
 The distributed SPMD path (pjit over the production mesh) lives in
 ``repro/launch`` -- this module is the algorithm-fidelity / communication-
 accounting harness used by tests, benchmarks, and the examples.
@@ -31,7 +42,8 @@ from repro.optim import sgd
 
 from .compression import make_method
 
-__all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch"]
+__all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch",
+           "make_local_train", "make_eval_step"]
 
 
 def default_tiny_arch(vocab: int = 256) -> ArchConfig:
@@ -67,6 +79,13 @@ class FLConfig:
     policy_overrides: Dict[str, tuple] = field(default_factory=dict)
     coverage_target: float = 0.90
     min_params: int = 4096           # tiny model -> lower floor than prod
+    #: "fused" = single-XLA-program client-parallel round (engine.py);
+    #: "loop" = per-client reference loop.  Fused falls back to loop for
+    #: methods it does not cover (per-tensor baselines, downlink codec).
+    engine: str = "fused"
+    #: route the GradESTC A/E projection through the Pallas kernel inside the
+    #: fused engine.  None = auto (True on TPU, False elsewhere).
+    use_pallas: Optional[bool] = None
 
 
 @dataclass
@@ -105,7 +124,6 @@ def _flatten_groups(params, groups) -> Dict[str, jnp.ndarray]:
 
 
 def _set_groups(params, updates: Dict[str, jnp.ndarray]):
-    import copy
     new = jax.tree.map(lambda x: x, params)   # shallow-copy containers
 
     def setpath(tree, parts, val):
@@ -122,29 +140,16 @@ def _set_groups(params, updates: Dict[str, jnp.ndarray]):
     return new
 
 
-def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
-    t0 = time.time()
-    arch = cfg.arch or default_tiny_arch()
-    task = make_task(vocab=arch.vocab, n_clients=cfg.n_clients, alpha=cfg.alpha,
-                     seed=cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
-    params = model.init_params(arch, key)
+def make_local_train(arch: ArchConfig, lr: float):
+    """Jitted ``local_steps`` SGD scan; batches: {k: (steps, B, S)}.
 
-    groups = param_group_shapes(arch)
-    policy = make_policy(groups, overrides=cfg.policy_overrides,
-                         coverage_target=cfg.coverage_target,
-                         min_params=cfg.min_params)
-    method = make_method(cfg.method, policy=policy, seed=cfg.seed, **cfg.method_kw)
-    downlink_codec = (
-        make_method("gradestc", policy=policy, seed=cfg.seed + 101)
-        if cfg.downlink_compress else None
-    )
-
-    opt_init, opt_update = sgd(cfg.lr)
+    Shared by both engines -- the fused engine vmaps this exact function over
+    the selected-client axis, so per-client math is identical to the loop.
+    """
+    opt_init, opt_update = sgd(lr)
 
     @jax.jit
     def local_train(p, batches):
-        """scan ``local_steps`` SGD steps; batches: {k: (steps, B, S)}."""
         st = opt_init(p)
 
         def step(carry, b):
@@ -156,6 +161,10 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
         (p2, _), _ = jax.lax.scan(step, (p, st), batches)
         return p2
 
+    return local_train
+
+
+def make_eval_step(arch: ArchConfig):
     @jax.jit
     def eval_step(p, batch):
         logits = model.forward(arch, p, batch)
@@ -165,19 +174,88 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
         acc = jnp.mean(jnp.argmax(logits, -1) == labels)
         return jnp.mean(logz - gold), acc
 
+    return eval_step
+
+
+def _fused_supported(cfg: FLConfig) -> bool:
+    m = cfg.method.lower()
+    return (m == "fedavg" or m.startswith("gradestc")) and not cfg.downlink_compress
+
+
+@dataclass
+class _RunSetup:
+    """Everything both engines must construct *identically* for parity:
+    model/task/policy, per-client data streams, eval batches, selection rng,
+    and the participation count.  Built in exactly one place."""
+
+    arch: ArchConfig
+    task: Any
+    params: Any
+    groups: Dict[str, tuple]
+    group_paths: List[str]
+    policy: Any
+    method: Any
+    streams: Dict[int, Any]
+    eval_batches: List[Dict[str, jnp.ndarray]]
+    eval_step: Callable
+    ledger: CommLedger
+    rng: np.random.Generator
+    n_sel: int
+
+
+def _setup_run(cfg: FLConfig) -> _RunSetup:
+    arch = cfg.arch or default_tiny_arch()
+    task = make_task(vocab=arch.vocab, n_clients=cfg.n_clients, alpha=cfg.alpha,
+                     seed=cfg.seed)
+    params = model.init_params(arch, jax.random.PRNGKey(cfg.seed))
+    groups = param_group_shapes(arch)
+    policy = make_policy(groups, overrides=cfg.policy_overrides,
+                         coverage_target=cfg.coverage_target,
+                         min_params=cfg.min_params)
+    method = make_method(cfg.method, policy=policy, seed=cfg.seed, **cfg.method_kw)
     streams = {c: client_batch_stream(task, c, cfg.batch, cfg.seq, cfg.seed)
                for c in range(cfg.n_clients)}
     eval_stream = client_batch_stream(task, -1, cfg.batch, cfg.seq, cfg.seed + 999)
     eval_batches = [next(eval_stream) for _ in range(cfg.eval_batches)]
+    return _RunSetup(
+        arch=arch, task=task, params=params, groups=groups,
+        group_paths=list(groups.keys()), policy=policy, method=method,
+        streams=streams, eval_batches=eval_batches,
+        eval_step=make_eval_step(arch), ledger=CommLedger(),
+        rng=np.random.default_rng(cfg.seed),
+        n_sel=max(1, int(round(cfg.participation * cfg.n_clients))),
+    )
 
-    ledger = CommLedger()
-    rng = np.random.default_rng(cfg.seed)
-    group_paths = list(groups.keys())
-    n_sel = max(1, int(round(cfg.participation * cfg.n_clients)))
+
+def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
+    if cfg.engine not in ("fused", "loop"):
+        raise ValueError(f"unknown engine {cfg.engine!r} (want 'fused' or 'loop')")
+    if cfg.engine == "fused" and _fused_supported(cfg):
+        from .engine import run_fl_fused
+
+        return run_fl_fused(cfg, progress)
+    return _run_fl_loop(cfg, progress)
+
+
+def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
+    t0 = time.time()
+    su = _setup_run(cfg)
+    params, method, eval_step = su.params, su.method, su.eval_step
+    streams, eval_batches, ledger = su.streams, su.eval_batches, su.ledger
+    rng, group_paths, n_sel = su.rng, su.group_paths, su.n_sel
+    key = jax.random.PRNGKey(cfg.seed)
+    downlink_codec = (
+        make_method("gradestc", policy=su.policy, seed=cfg.seed + 101)
+        if cfg.downlink_compress else None
+    )
+
+    local_train = make_local_train(su.arch, cfg.lr)
 
     res = FLResult([], [], [], [], ledger, 0.0)
+    round_wall = []
 
     for rnd in range(cfg.rounds):
+        t_round = time.perf_counter()
         ledger.begin_round()
         sel = sorted(rng.choice(cfg.n_clients, size=n_sel, replace=False))
         acc_deltas: Optional[Dict[str, jnp.ndarray]] = None
@@ -208,6 +286,7 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
             # *reconstruction* to stay bit-identical with clients.
             key, sub = jax.random.split(key)
             avg, dl_scalars = downlink_codec.round_payload(-1, avg, sub, rnd)
+            downlink_codec.end_round()    # Formula 13 for the shared codec too
             ledger.charge_downlink(float(dl_scalars) * n_sel)
         else:
             ledger.charge_downlink(
@@ -216,6 +295,8 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
         flat = _flatten_groups(params, group_paths)
         params = _set_groups(params, {p: flat[p] + avg[p].astype(flat[p].dtype)
                                       for p in group_paths})
+        jax.block_until_ready(params)
+        round_wall.append(time.perf_counter() - t_round)
 
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
             ls, accs = zip(*[eval_step(params, b) for b in eval_batches])
@@ -230,6 +311,8 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
                 })
 
     res.wall_s = time.time() - t0
+    res.extra["engine"] = "loop"
+    res.extra["round_wall_s"] = round_wall
     if hasattr(method, "sum_d"):
         res.extra["sum_d"] = method.sum_d
     return res

@@ -52,11 +52,10 @@ def choose_block_m(l: int, k: int, dtype=jnp.float32, budget: int = VMEM_BUDGET_
 
 
 def _pad_cols(G: jnp.ndarray, mult: int) -> Tuple[jnp.ndarray, int]:
-    m = G.shape[-1]
-    pad = (-m) % mult
-    if pad:
-        G = jnp.pad(G, ((0, 0), (0, pad)))
-    return G, pad
+    from repro.core.reshaping import pad_to_block
+
+    Gp, m = pad_to_block(G, mult, axis=-1)
+    return Gp, Gp.shape[-1] - m
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -71,6 +70,10 @@ def encode(
     bm = choose_block_m(l, k, G.dtype)
     if bm == 0:
         return ref.encode_ref(M, G)   # l too large for single-pass VMEM
+    # Never tile wider than the matrix itself: a small-m G only pays for
+    # padding up to the next 128 multiple, not up to the VMEM-budget block.
+    m128 = G.shape[1] + ((-G.shape[1]) % 128)
+    bm = min(bm, m128)
     Gp, pad = _pad_cols(G, bm)
     A, E = encode_pallas(M, Gp, block_m=bm, interpret=interp)
     if pad:

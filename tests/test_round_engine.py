@@ -1,0 +1,125 @@
+"""Fused round engine vs the per-client reference loop (DESIGN.md Sec. 8).
+
+The loop path is the parity oracle: same seeds, same data draws, same
+fold_in key chains -- the fused engine must reproduce its eval-loss
+trajectory to float tolerance and its uplink byte accounting *exactly*.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.reshaping import pad_to_block
+from repro.fl import FLConfig, run_fl
+
+
+def _cfg(**kw):
+    base = dict(method="gradestc", rounds=6, n_clients=4, local_steps=1,
+                batch=4, seq=16, eval_every=2, seed=1)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_parity(loop, fused, atol=1e-5):
+    assert loop.extra["engine"] == "loop"
+    assert fused.extra["engine"] == "fused"
+    np.testing.assert_allclose(fused.eval_loss, loop.eval_loss, rtol=0, atol=atol)
+    # byte accounting is exact, not approximate
+    assert fused.ledger.per_round_uplink == loop.ledger.per_round_uplink
+    assert fused.ledger.uplink_total == loop.ledger.uplink_total
+    assert fused.uplink_bytes == loop.uplink_bytes
+    assert fused.extra.get("sum_d") == loop.extra.get("sum_d")
+
+
+class TestFusedLoopParity:
+    def test_trajectory_and_accounting_match(self):
+        loop = run_fl(_cfg(engine="loop"))
+        fused = run_fl(_cfg(engine="fused"))
+        _assert_parity(loop, fused)
+
+    def test_partial_participation_parity(self):
+        """Mixed init/update rounds (stragglers initializing late)."""
+        kw = dict(participation=0.5, n_clients=6, rounds=5)
+        loop = run_fl(_cfg(engine="loop", **kw))
+        fused = run_fl(_cfg(engine="fused", **kw))
+        _assert_parity(loop, fused)
+
+    @pytest.mark.parametrize("method", ["gradestc-first", "gradestc-ef", "fedavg"])
+    def test_variant_parity(self, method):
+        kw = dict(method=method, rounds=4, eval_every=3)
+        loop = run_fl(_cfg(engine="loop", **kw))
+        fused = run_fl(_cfg(engine="fused", **kw))
+        _assert_parity(loop, fused)
+
+    def test_single_host_sync_per_round(self):
+        """The fused engine's contract: one device->host fetch per round."""
+        rounds = 5
+        metrics.reset_host_sync_count()
+        run_fl(_cfg(engine="fused", rounds=rounds, eval_every=100))
+        assert metrics.host_sync_count() == rounds
+
+    def test_loop_syncs_scale_with_clients(self):
+        """Sanity on the counter itself: the reference loop syncs at least
+        once per (client, compressed group) per steady round."""
+        metrics.reset_host_sync_count()
+        res = run_fl(_cfg(engine="loop", rounds=3, eval_every=100))
+        assert res.extra["engine"] == "loop"
+        assert metrics.host_sync_count() > 3 * 4    # rounds * clients
+
+    def test_unsupported_method_falls_back_to_loop(self):
+        res = run_fl(_cfg(method="topk", engine="fused", rounds=2, eval_every=1))
+        assert res.extra["engine"] == "loop"
+
+    def test_pallas_encode_inside_engine_matches(self):
+        """use_pallas routes A/E through the kernel (interpret on CPU) and
+        must not change the trajectory or the accounting."""
+        ref = run_fl(_cfg(engine="fused", rounds=4, use_pallas=False))
+        pal = run_fl(_cfg(engine="fused", rounds=4, use_pallas=True))
+        assert pal.extra["use_pallas"] is True
+        np.testing.assert_allclose(pal.eval_loss, ref.eval_loss, rtol=0, atol=1e-6)
+        assert pal.ledger.per_round_uplink == ref.ledger.per_round_uplink
+
+
+class TestPaddedEncodeKernel:
+    """encode_pallas only accepts m % block_m == 0; the ops.encode wrapper
+    (and the engine through it) pads via core/reshaping.pad_to_block."""
+
+    @pytest.mark.parametrize("l,k,m", [(96, 8, 100), (64, 4, 37), (256, 16, 200)])
+    def test_non_128_multiple_m_matches_einsum(self, l, k, m, key):
+        from repro.kernels.ops import encode
+
+        Mq, _ = jnp.linalg.qr(jax.random.normal(key, (l, k), jnp.float32))
+        G = jax.random.normal(jax.random.PRNGKey(7), (l, m), jnp.float32)
+        A1, E1 = encode(Mq, G, interpret=True)
+        A0 = jnp.einsum("lk,lm->km", Mq, G)
+        E0 = G - jnp.einsum("lk,km->lm", Mq, A0)
+        assert A1.shape == (k, m) and E1.shape == (l, m)
+        np.testing.assert_allclose(np.asarray(A1), np.asarray(A0), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(E1), np.asarray(E0), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("l,k,m", [(96, 8, 100), (64, 4, 37)])
+    def test_direct_pallas_call_on_padded_input(self, l, k, m, key):
+        from repro.kernels.gradestc_encode import encode_pallas
+
+        Mq, _ = jnp.linalg.qr(jax.random.normal(key, (l, k), jnp.float32))
+        G = jax.random.normal(jax.random.PRNGKey(8), (l, m), jnp.float32)
+        Gp, m0 = pad_to_block(G, 128, axis=-1)
+        assert m0 == m and Gp.shape[-1] % 128 == 0
+        A, E = encode_pallas(Mq, Gp, block_m=128, interpret=True)
+        A, E = A[:, :m], E[:, :m]
+        A0 = jnp.einsum("lk,lm->km", Mq, G)
+        np.testing.assert_allclose(np.asarray(A), np.asarray(A0), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(E), np.asarray(G - Mq @ A0),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_pad_to_block_noop_and_zero_fill(self):
+        x = jnp.ones((3, 128))
+        same, m0 = pad_to_block(x, 128, axis=-1)
+        assert same is x and m0 == 128
+        padded, m0 = pad_to_block(jnp.ones((3, 100)), 128, axis=-1)
+        assert padded.shape == (3, 128) and m0 == 100
+        assert float(jnp.abs(padded[:, 100:]).max()) == 0.0
