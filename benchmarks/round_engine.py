@@ -1,23 +1,28 @@
-"""Round-engine benchmark: fused single-program round vs per-client loop.
+"""Round-engine benchmark: fused single-program round vs per-client loop,
+per *method* (the codec protocol runs every Table III method fused).
 
-Measures, at n_clients in {10, 50, 100} on the current backend:
+Measures, for each method at the configured client counts on the current
+backend:
 
-  * steady-state rounds/sec per engine (median per-round wall time after the
-    compile/warmup rounds -- ``FLResult.extra["round_wall_s"]``);
+  * steady-state rounds/sec per engine -- the median per-round wall time
+    *after* the warmup rounds, reported separately from the first round
+    (which is dominated by XLA trace+compile time; mixing it into the mean
+    would swamp the per-method steady-state comparison);
   * measured host syncs per round (every device->host fetch in the FL
-    runtime goes through ``core.metrics.host_fetch``; the fused engine's
-    contract is exactly 1, the loop pays 2 per (client, compressed group));
-  * the fused-over-loop speedup.
+    runtime goes through ``core.metrics.host_fetch``; both engines now
+    contract to exactly 1 -- the packed stats vector);
+  * the fused-over-loop steady-state speedup.
 
 The model is deliberately tiny: the engines run *identical* math, so at
-equal compute the ratio isolates what this PR attacks -- per-client dispatch
-and host-sync overhead, which is what dominates FL simulation at the 100+
-client scale of the paper's comparisons.
+equal compute the ratio isolates per-client dispatch overhead, which is
+what dominates FL simulation at the 100+ client scale of the paper's
+comparisons.
 
 Emits ``BENCH_round_engine.json`` (committed at the repo root so the perf
 trajectory is tracked PR-over-PR).
 
-Usage:  PYTHONPATH=src python benchmarks/round_engine.py [--out PATH]
+Usage:  PYTHONPATH=src python benchmarks/round_engine.py \
+            [--out PATH] [--clients C ...] [--methods M ...]
 """
 
 from __future__ import annotations
@@ -35,7 +40,12 @@ from repro.core import metrics
 from repro.fl import FLConfig, run_fl
 from repro.models.config import ArchConfig
 
-CLIENT_COUNTS = (10, 50, 100)
+#: every method is benchmarked at this client count (the acceptance bar:
+#: >= 2x fused-over-loop for the baselines at 50 clients on CPU) ...
+METHOD_CLIENTS = 50
+#: ... and GradESTC additionally sweeps the scaling curve.
+GRADESTC_CLIENTS = (10, 50, 100)
+METHODS = ("gradestc", "topk", "fedpaq", "signsgd", "fedqclip", "svdfed")
 WARMUP_ROUNDS = 4          # covers init round + Formula-13 d re-bucketing compiles
 MEASURED_ROUNDS = 8
 
@@ -49,16 +59,16 @@ def bench_arch() -> ArchConfig:
     )
 
 
-def bench_cfg(engine: str, n_clients: int) -> FLConfig:
+def bench_cfg(method: str, engine: str, n_clients: int) -> FLConfig:
     return FLConfig(
-        method="gradestc", rounds=WARMUP_ROUNDS + MEASURED_ROUNDS,
+        method=method, rounds=WARMUP_ROUNDS + MEASURED_ROUNDS,
         n_clients=n_clients, local_steps=1, batch=1, seq=8,
         eval_every=10 ** 9, seed=0, arch=bench_arch(), engine=engine,
     )
 
 
-def measure(engine: str, n_clients: int) -> dict:
-    cfg = bench_cfg(engine, n_clients)
+def measure(method: str, engine: str, n_clients: int) -> dict:
+    cfg = bench_cfg(method, engine, n_clients)
     metrics.reset_host_sync_count()
     res = run_fl(cfg)
     syncs = metrics.host_sync_count()
@@ -66,8 +76,12 @@ def measure(engine: str, n_clients: int) -> dict:
     steady = float(np.median(wall[WARMUP_ROUNDS:]))
     return {
         "engine": res.extra["engine"],
+        "method": method,
         "n_clients": n_clients,
+        # steady state and trace/compile cost reported separately: round 0
+        # is dominated by compilation and would otherwise skew any mean.
         "steady_round_ms": steady * 1e3,
+        "first_round_ms": wall[0] * 1e3,
         "rounds_per_sec": 1.0 / steady,
         "host_syncs_per_round": syncs / cfg.rounds,
         "warmup_rounds": WARMUP_ROUNDS,
@@ -82,27 +96,42 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=str(pathlib.Path(__file__).resolve()
                                          .parent.parent / "BENCH_round_engine.json"))
-    ap.add_argument("--clients", type=int, nargs="*", default=list(CLIENT_COUNTS))
+    ap.add_argument("--clients", type=int, nargs="*", default=None,
+                    help="override client counts (applied to every method)")
+    ap.add_argument("--methods", nargs="*", default=list(METHODS))
     args = ap.parse_args(argv)
 
-    results, speedups = [], {}
-    for C in args.clients:
-        loop = measure("loop", C)
-        fused = measure("fused", C)
+    grid = []
+    for method in args.methods:
+        counts = (args.clients if args.clients
+                  else GRADESTC_CLIENTS if method == "gradestc"
+                  else (METHOD_CLIENTS,))
+        grid += [(method, C) for C in counts]
+
+    results = []
+    speedups: dict = {}
+    for method, C in grid:
+        loop = measure(method, "loop", C)
+        fused = measure(method, "fused", C)
         results += [loop, fused]
-        speedups[str(C)] = loop["steady_round_ms"] / fused["steady_round_ms"]
-        print(f"n_clients={C:4d}  loop {loop['steady_round_ms']:8.1f} ms/round "
+        sp = loop["steady_round_ms"] / fused["steady_round_ms"]
+        speedups.setdefault(method, {})[str(C)] = sp
+        print(f"{method:10s} n_clients={C:4d}  "
+              f"loop {loop['steady_round_ms']:8.1f} ms/round "
               f"({loop['host_syncs_per_round']:.1f} syncs)   "
               f"fused {fused['steady_round_ms']:8.1f} ms/round "
               f"({fused['host_syncs_per_round']:.1f} syncs)   "
-              f"speedup {speedups[str(C)]:.2f}x")
+              f"speedup {sp:.2f}x   "
+              f"[first round: loop {loop['first_round_ms']:.0f} ms, "
+              f"fused {fused['first_round_ms']:.0f} ms]")
 
     payload = {
         "benchmark": "round_engine",
         "backend": jax.default_backend(),
         "device": str(jax.devices()[0]),
         "arch": dataclasses.asdict(bench_arch()),
-        "config": {"local_steps": 1, "batch": 1, "seq": 8, "method": "gradestc"},
+        "config": {"local_steps": 1, "batch": 1, "seq": 8,
+                   "methods": args.methods},
         "results": results,
         "speedup_fused_over_loop": speedups,
     }

@@ -7,11 +7,14 @@ Public API surface of the paper's contribution:
   * gradestc    -- compressor / decompressor pair (Algorithms 1-2)
   * policy      -- parameter-dominant layer selection and (k, l) assignment
   * baselines   -- Top-k / FedPAQ / signSGD / SVDFed / FedQClip comparators
+  * codecs      -- the stateless functional codec protocol every method
+                   implements (vmappable encode + exact integer-bit
+                   accounting; DESIGN.md Sec. 9)
   * error_feedback -- EF memory (paper Sec. VI future work; beyond-paper)
   * metrics     -- exact uplink/downlink byte accounting
 """
 
-from . import baselines, error_feedback, gradestc, metrics, policy, reshaping, rsvd
+from . import baselines, codecs, error_feedback, gradestc, metrics, policy, reshaping, rsvd
 from .gradestc import (
     CompressorState,
     DecompressorState,
@@ -29,7 +32,7 @@ from .reshaping import matrix_to_tensor, reshape_to_matrix, segment, unsegment
 from .rsvd import randomized_svd
 
 __all__ = [
-    "baselines", "error_feedback", "gradestc", "metrics", "policy",
+    "baselines", "codecs", "error_feedback", "gradestc", "metrics", "policy",
     "reshaping", "rsvd",
     "CompressorState", "DecompressorState", "Payload", "CompressStats",
     "compress", "compress_init", "compress_update", "decompress",

@@ -1,0 +1,544 @@
+"""Stateless functional codec protocol (DESIGN.md Sec. 9).
+
+Every uplink compression method -- the paper's GradESTC *and* the six
+Table III baselines -- is expressed as a :class:`Codec`: a pure-functional,
+per-parameter-group compressor whose state is explicit arrays (no Python
+dicts keyed by ``(client, path)``).  The contract is what lets one round
+engine serve every method:
+
+  * ``init_client_state(n_clients)`` returns the per-client state stacked on
+    a leading client axis (``()`` for stateless codecs), so a whole round of
+    client encodes is ``vmap(encode)`` over that axis;
+  * ``init_shared_state()`` returns server-side state shared by all clients
+    (SVDFed's basis; ``()`` for the rest);
+  * ``encode(cstate, shared, key, wire, static, mode)`` is the per-client
+    step: returns the new client state, the server-side reconstruction in
+    wire layout, and a small **int32 stats vector** -- the only thing the
+    host ever needs to see;
+  * ``reduce_stats`` / ``update_shared`` run in-jit after the client vmap
+    (cross-client stat reduction; SVDFed's conditional basis refit);
+  * ``charge_bits`` / ``init_static`` / ``next_static`` are host-side pure
+    functions over the fetched stats: exact integer bit accounting
+    (Formula 14 and each baseline's wire format) and the per-round static
+    configuration (GradESTC's Formula 13 candidate count ``d``).
+
+Layout: a codec owns its wire layout via ``to_wire`` / ``from_wire``.
+GradESTC works on stacked ``(L, l, m)`` segment matrices; the per-tensor
+baselines use the flat ``(n,)`` group vector (stacked to ``(C, n)`` across
+clients by the engine's vmap, the flat analogue of GradESTC's
+``(C, L, l, k)`` basis stacking).
+
+Byte accounting is **integer bits** end to end: ``charge_bits`` returns a
+Python int, and the ledger is charged ``bits / 32`` scalars (exact -- a
+dyadic rational, so f32/f64 rounding above 2^24 scalars cannot skew
+Table III totals the way the old per-tensor ``float(sc)`` accumulation
+could).  Data-dependent counts (GradESTC's d_r, SVDFed's refit flag) travel
+in the packed stats vector; everything else is shape-static.
+
+PRNG: every stream is a ``fold_in`` chain (PYTHONHASHSEED-independent, and
+derivable from traced ints inside a jitted round): per-round codec
+randomness from :func:`round_base_key` + ``Codec.per_client_key``, GradESTC
+basis keys from :func:`client_layer_keys`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines as bl
+from . import gradestc as ge
+from .policy import LayerPlan
+from .rsvd import randomized_svd
+
+__all__ = [
+    "Codec", "EFCodec", "TopKCodec", "FedPAQCodec", "SignSGDCodec",
+    "FedQClipCodec", "SVDFedCodec", "GradESTCCodec",
+    "client_layer_keys", "round_base_key", "SERVER_CLIENT_ID",
+]
+
+#: Client id used for server-side (downlink) codec instances -- the masked
+#: ``-1`` the reference runtime always used for the shared codec.
+SERVER_CLIENT_ID = 0xFFFFFFFF
+
+
+def client_layer_keys(seed: int, client, path_idx, L: int) -> jnp.ndarray:
+    """Per-(client, group) rSVD key stack, one key per stacked layer.
+
+    Derived with ``fold_in`` chains only -- NOT Python ``hash()``, whose
+    string hashing is salted by ``PYTHONHASHSEED`` and therefore differs
+    across processes.  ``client``/``path_idx`` may be traced int32 scalars,
+    so the same derivation runs inside the fused engine's jitted round and
+    in the host reference loop, producing identical streams.
+    """
+    if isinstance(client, int):
+        client &= 0xFFFFFFFF    # server-side codecs use client=-1
+    base = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), client), path_idx
+    )
+    return jax.random.split(base, L)
+
+
+def round_base_key(seed: int, rnd: int) -> jax.Array:
+    """Per-round base for codec randomness (quantizer draws).  Folded with
+    the client id and group index by ``Codec.per_client_key``, so both
+    engines consume identical streams without threading a split chain."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed + 0x5EED), rnd)
+
+
+class Codec:
+    """Contract for one parameter group's compressor (see module docstring).
+
+    Subclasses override what they need; the defaults describe a stateless,
+    stats-free identity-layout codec.  All array-touching methods must be
+    shape-polymorphic pure functions (they run under vmap/jit); all host
+    methods take/return plain Python ints.
+    """
+
+    #: length of the per-client int32 stats vector returned by ``encode``
+    client_stats_len: int = 0
+    #: length of the reduced per-group stats vector (packed host transfer)
+    stats_len: int = 0
+    #: True when the first selection of a client compiles a different branch
+    #: (the engine tracks host-side which clients are initialized and
+    #: specializes the round's ``mode`` to keep steady rounds cond-free)
+    has_init_branch: bool = False
+
+    def __init__(self, path_idx: int = 0):
+        self.path_idx = path_idx
+
+    # -- state -------------------------------------------------------------
+    def init_client_state(self, n_clients: int, client_ids=None):
+        return ()
+
+    def init_shared_state(self):
+        return ()
+
+    # -- wire layout -------------------------------------------------------
+    def to_wire(self, delta: jnp.ndarray) -> jnp.ndarray:
+        """Group-shaped per-client delta -> codec wire layout (f32)."""
+        return delta
+
+    def from_wire(self, wire: jnp.ndarray, shape) -> jnp.ndarray:
+        return wire.reshape(shape)
+
+    # -- per-client encode (vmapped over the client axis by the engine) ----
+    def encode(self, cstate, shared, key, wire, static, mode):
+        """-> (cstate', recon_wire, stats int32 (client_stats_len,))."""
+        raise NotImplementedError
+
+    # -- in-jit cross-client reduction / server-side update ----------------
+    def reduce_stats(self, stats: jnp.ndarray) -> jnp.ndarray:
+        """(C, client_stats_len) -> (stats_len,) int32."""
+        return jnp.zeros((0,), jnp.int32)
+
+    def update_shared(self, shared, reduced_stats, mean_wire):
+        return shared
+
+    # -- host side ---------------------------------------------------------
+    def per_client_key(self, base_key, client):
+        """Per-(round, client, group) randomness; ``client`` may be traced."""
+        return jax.random.fold_in(jax.random.fold_in(base_key, client),
+                                  self.path_idx)
+
+    def init_static(self):
+        """Initial per-round static config (hashable; None if unused)."""
+        return None
+
+    def next_static(self, reduced: np.ndarray, static):
+        """Host rule updating the static config from fetched stats."""
+        return static
+
+    def charge_bits(self, reduced: np.ndarray, n_sel: int, static) -> int:
+        """Exact uplink bits for ``n_sel`` clients this round (Python int)."""
+        raise NotImplementedError
+
+    def host_metrics(self, reduced: np.ndarray, n_sel: int, static) -> Dict[str, int]:
+        """Optional per-round host-side metric increments (e.g. sum_d)."""
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# per-tensor baselines: flat (n,) wire layout
+# ---------------------------------------------------------------------------
+
+class _FlatCodec(Codec):
+    """Shared flat-vector layout for the per-tensor baselines."""
+
+    def __init__(self, n: int, path_idx: int = 0):
+        super().__init__(path_idx)
+        self.n = int(n)
+
+    def to_wire(self, delta: jnp.ndarray) -> jnp.ndarray:
+        return delta.reshape(-1).astype(jnp.float32)
+
+
+class TopKCodec(_FlatCodec):
+    """Magnitude top-k with per-client error memory (ref [23]).
+
+    Wire: k values + k int32 indices -> 2k * 32 bits per client.
+    """
+
+    def __init__(self, n: int, frac: float = 0.1, path_idx: int = 0):
+        super().__init__(n, path_idx)
+        self.k = max(1, int(frac * self.n))
+
+    def init_client_state(self, n_clients: int, client_ids=None):
+        return jnp.zeros((n_clients, self.n), jnp.float32)
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        st, ghat, _ = bl.topk_compress(bl.TopKState(cstate), wire, self.k)
+        return st.memory, ghat, jnp.zeros((0,), jnp.int32)
+
+    def charge_bits(self, reduced, n_sel, static):
+        return 32 * 2 * self.k * n_sel
+
+
+class FedPAQCodec(_FlatCodec):
+    """Stochastic uniform quantization (ref [21]).
+
+    ``use_pallas=False``: the paper's global-max-abs scale
+    (``core.baselines.quantize_stochastic``) -- n*bits + one 32-bit scale.
+    ``use_pallas=True``: the TPU-native block-local quantizer
+    (``kernels/quant.py`` via the ``kernels.ops`` dispatch) -- n*bits plus
+    one 32-bit scale per ``block`` entries.
+    """
+
+    def __init__(self, n: int, bits: int = 8, path_idx: int = 0,
+                 use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None, block: int = 512):
+        super().__init__(n, path_idx)
+        self.bits = int(bits)
+        self.use_pallas = bool(use_pallas)
+        self.pallas_interpret = pallas_interpret
+        self.block = int(block)
+
+    def _quantize(self, g, key):
+        from repro.kernels.ops import quantize_update
+
+        return quantize_update(
+            g, key, bits=self.bits, block=self.block,
+            use_pallas=self.use_pallas, interpret=self.pallas_interpret,
+        )
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        return (), self._quantize(wire, key), jnp.zeros((0,), jnp.int32)
+
+    @property
+    def _n_scales(self) -> int:
+        return -(-self.n // self.block) if self.use_pallas else 1
+
+    def charge_bits(self, reduced, n_sel, static):
+        return (self.n * self.bits + 32 * self._n_scales) * n_sel
+
+
+class SignSGDCodec(_FlatCodec):
+    """1-bit sign compression with a mean-magnitude scale (ref [20])."""
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        ghat, _ = bl.sign_compress(wire)
+        return (), ghat, jnp.zeros((0,), jnp.int32)
+
+    def charge_bits(self, reduced, n_sel, static):
+        return (self.n + 32) * n_sel
+
+
+class FedQClipCodec(FedPAQCodec):
+    """Clipped + quantized updates (ref [42]); same wire as FedPAQ."""
+
+    def __init__(self, n: int, clip: float = 100.0, bits: int = 8,
+                 path_idx: int = 0, use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None, block: int = 512):
+        super().__init__(n, bits, path_idx, use_pallas, pallas_interpret, block)
+        self.clip = float(clip)
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        norm = jnp.linalg.norm(wire)
+        clipped = wire * jnp.minimum(1.0, self.clip / jnp.maximum(norm, 1e-12))
+        return (), self._quantize(clipped, key), jnp.zeros((0,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# matrix-layout codecs: stacked (L, l, m) segment matrices
+# ---------------------------------------------------------------------------
+
+class _MatrixCodec(Codec):
+    """Shared (L, l, m) segment-matrix layout (``columns = segments``)."""
+
+    def __init__(self, plan: LayerPlan, path_idx: int = 0):
+        super().__init__(path_idx)
+        self.plan = plan
+
+    def to_wire(self, delta: jnp.ndarray) -> jnp.ndarray:
+        plan = self.plan
+        flat = delta.reshape(plan.stack, -1)
+        m = plan.n // plan.l
+        return (flat.reshape(plan.stack, m, plan.l)
+                .swapaxes(-1, -2).astype(jnp.float32))
+
+    def from_wire(self, wire: jnp.ndarray, shape) -> jnp.ndarray:
+        plan = self.plan
+        flat = wire.swapaxes(-1, -2).reshape(plan.stack, plan.n)
+        return flat.reshape(shape)
+
+
+class SVDFedCodec(_MatrixCodec):
+    """Globally shared per-group basis (ref [12]), round-granular refits.
+
+    The shared basis M lives server-side; clients upload coefficients
+    ``A = M^T G`` between refits.  A *refit round* ships raw G from every
+    client (full uplink, SVDFed's calibration cost) and the server re-fits
+    M from the aggregated gradient in-jit.  The refit decision is taken at
+    round granularity: if any client's relative fitting error exceeds
+    ``gamma``% this round, the *next* round is a refit round.  (The old
+    host-dict implementation flipped mid-round in client-iteration order,
+    which no client-symmetric vmap can reproduce; round granularity is the
+    deterministic formulation both engines share.)  Round 0 is always a
+    refit round (M starts empty).
+    """
+
+    #: stats: [is_refit_round, wants_refit_next]
+    client_stats_len = 2
+    stats_len = 2
+
+    def __init__(self, plan: LayerPlan, gamma: float = 8.0, seed: int = 0,
+                 path_idx: int = 0):
+        super().__init__(plan, path_idx)
+        self.gamma = float(gamma)
+        self.seed = int(seed)
+
+    def init_shared_state(self):
+        plan = self.plan
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 17),
+                                 self.path_idx)
+        return (jnp.zeros((plan.stack, plan.l, plan.k), jnp.float32),
+                key, jnp.ones((), jnp.bool_))
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        M, _, refit = shared
+        A = jnp.einsum("xlk,xlm->xkm", M, wire)
+        Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
+        recon = jnp.where(refit, wire, Ghat)
+        err = jnp.sum((wire - Ghat).astype(jnp.float32) ** 2)
+        den = jnp.maximum(jnp.sum(wire.astype(jnp.float32) ** 2), 1e-30)
+        thresh = (self.gamma / 100.0) ** 2
+        want = jnp.logical_and(~refit, err > thresh * den)
+        stats = jnp.stack([refit, want]).astype(jnp.int32)
+        return (), recon, stats
+
+    def reduce_stats(self, stats):
+        return jnp.max(stats, axis=0).astype(jnp.int32)
+
+    def update_shared(self, shared, reduced_stats, mean_wire):
+        M, key, refit = shared
+        key2, sub = jax.random.split(key)
+
+        def _fit(_):
+            subs = jax.random.split(sub, self.plan.stack)
+            return jax.vmap(
+                lambda g, kk: randomized_svd(kk, g, rank=self.plan.k)[0]
+            )(mean_wire, subs)
+
+        M2 = jax.lax.cond(refit, _fit, lambda _: M, operand=None)
+        return (M2, key2, reduced_stats[1] > 0)
+
+    def charge_bits(self, reduced, n_sel, static):
+        plan = self.plan
+        if int(reduced[0]):                       # refit round: raw uplink
+            return 32 * plan.raw_scalars * n_sel
+        return 32 * plan.k * plan.m * plan.stack * n_sel
+
+
+class GradESTCCodec(_MatrixCodec):
+    """The paper's spatio-temporal compressor (Algorithms 1-2).
+
+    Per-client state: basis stack ``(L, l, k)``, rSVD key stack ``(L, 2)``,
+    per-layer init flags ``(L,)`` -- stacked to ``(C, ...)`` by the engine.
+    ``static`` is the rSVD candidate count ``d`` (XLA needs a static sketch
+    shape); ``next_static`` is Formula 13 on the round's max d_r, bucketed
+    to powers of two.  ``mode`` statically selects the branch structure:
+
+    * ``"init"``   -- every selected client uninitialized (round 0).
+    * ``"update"`` -- every selected client initialized (the steady state).
+    * ``"mixed"``  -- stragglers under partial participation; keeps the
+      ``lax.cond`` (a vmapped cond lowers to a select that executes both
+      branches, i.e. a full extra rSVD -- affordable only on mixed rounds).
+
+    Stats per client: ``[max d_r over updating layers, #layers on the init
+    branch... (as n_upd = #updating layers), sum d_r]`` -- reduced across
+    clients to ``[drmax, n_upd, sum_dr]``, from which the host rebuilds
+    Formula 14 in exact integer arithmetic.
+    """
+
+    client_stats_len = 3
+    stats_len = 3
+
+    def __init__(self, plan: LayerPlan, seed: int = 0, path_idx: int = 0,
+                 variant: str = "full", alpha: float = 1.3, beta: float = 1.0,
+                 use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None):
+        assert variant in ("full", "first", "all", "k")
+        super().__init__(plan, path_idx)
+        self.seed = int(seed)
+        self.variant = variant
+        self.alpha, self.beta = float(alpha), float(beta)
+        self.use_pallas = bool(use_pallas)
+        self.pallas_interpret = pallas_interpret
+
+    @property
+    def has_init_branch(self) -> bool:           # "all" re-inits every round
+        return self.variant != "all"
+
+    def init_client_state(self, n_clients: int, client_ids=None):
+        plan = self.plan
+        L, l, k = plan.stack, plan.l, plan.k
+        ids = (jnp.arange(n_clients) if client_ids is None
+               else jnp.asarray(client_ids, jnp.uint32))
+        return (
+            jnp.zeros((n_clients, L, l, k), jnp.float32),
+            jax.vmap(lambda c: client_layer_keys(self.seed, c, self.path_idx, L))(ids),
+            jnp.zeros((n_clients, L), jnp.bool_),
+        )
+
+    def _layer_step(self, d: int, mode: str):
+        k = self.plan.k
+
+        def _init(st, G):
+            st2, payload, stats = ge.compress_init(st, G, k=k)
+            return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
+                    stats.d_r, jnp.ones((), jnp.bool_))
+
+        def _update(st, G):
+            st2, payload, stats = ge.compress_update(
+                st, G, k=k, d=d, use_pallas=self.use_pallas,
+                pallas_interpret=self.pallas_interpret,
+            )
+            return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
+                    stats.d_r, jnp.zeros((), jnp.bool_))
+
+        def _project(st, G):
+            # GradESTC-first ablation: frozen basis, coefficients only.
+            A = st.M.T @ G
+            return (st.M, st.key, st.M @ A,
+                    jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_))
+
+        steady = _project if self.variant == "first" else _update
+
+        def step(M, key, initialized, G):
+            st = ge.CompressorState(M=M, key=key, initialized=initialized)
+            if self.variant == "all" or mode == "init":
+                return _init(st, G)
+            if mode == "update":
+                return steady(st, G)
+            return jax.lax.cond(initialized, steady, _init, st, G)
+
+        return step
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        M, keys, inited = cstate
+        step = self._layer_step(static, mode)
+        M2, K2, Ghat, d_r, was_init = jax.vmap(step)(M, keys, inited, wire)
+        # d_r on update branches only; inits (d_r == k) are reported via the
+        # n_upd count instead, so the host can reconstruct Formula 14 in
+        # exact integer arithmetic.
+        upd_dr = jnp.where(was_init, 0, d_r).astype(jnp.int32)
+        stats = jnp.stack([
+            jnp.max(upd_dr),
+            jnp.sum(~was_init).astype(jnp.int32),
+            jnp.sum(upd_dr),
+        ])
+        return (M2, K2, jnp.ones_like(inited)), Ghat, stats
+
+    def reduce_stats(self, stats):
+        return jnp.stack([
+            jnp.max(stats[:, 0]), jnp.sum(stats[:, 1]), jnp.sum(stats[:, 2]),
+        ]).astype(jnp.int32)
+
+    def init_static(self):
+        k = self.plan.k
+        return k if self.variant == "k" else max(1, k // 4)
+
+    def next_static(self, reduced, static):
+        drmax, n_upd = int(reduced[0]), int(reduced[1])
+        if self.variant == "full" and n_upd > 0:
+            return ge.next_candidate_count(drmax, self.plan.k,
+                                           self.alpha, self.beta)
+        return static
+
+    def charge_bits(self, reduced, n_sel, static):
+        plan = self.plan
+        n_upd, sum_dr = int(reduced[1]), int(reduced[2])
+        n_init = n_sel * plan.stack - n_upd
+        # Formula 14: inits ship the basis (k*l) + coefficients; updates
+        # ship coefficients + the d_r entering vectors and their indices.
+        return 32 * (n_init * (plan.k * plan.l + plan.k * plan.m)
+                     + n_upd * plan.k * plan.m
+                     + sum_dr * (plan.l + 1))
+
+    def host_metrics(self, reduced, n_sel, static):
+        # Computational-overhead proxy (Table IV): every init pays a rank-k
+        # sketch, every update a rank-d sketch (d only spent for full / k).
+        n_upd = int(reduced[1])
+        n_init = n_sel * self.plan.stack - n_upd
+        inc = self.plan.k * n_init
+        if self.variant in ("full", "k"):
+            inc += int(static) * n_upd
+        return {"sum_d": inc}
+
+
+class EFCodec(Codec):
+    """Error-feedback wrapper (paper Sec. VI / beyond-paper ``-ef``):
+    client memory accumulates the compression residual in wire layout and
+    re-injects it before the inner encode."""
+
+    def __init__(self, inner: Codec, mem_shape: Tuple[int, ...]):
+        super().__init__(inner.path_idx)
+        self.inner = inner
+        self.mem_shape = tuple(int(s) for s in mem_shape)
+        self.client_stats_len = inner.client_stats_len
+        self.stats_len = inner.stats_len
+
+    @property
+    def has_init_branch(self) -> bool:
+        return self.inner.has_init_branch
+
+    def init_client_state(self, n_clients: int, client_ids=None):
+        return (self.inner.init_client_state(n_clients, client_ids),
+                jnp.zeros((n_clients,) + self.mem_shape, jnp.float32))
+
+    def init_shared_state(self):
+        return self.inner.init_shared_state()
+
+    def to_wire(self, delta):
+        return self.inner.to_wire(delta)
+
+    def from_wire(self, wire, shape):
+        return self.inner.from_wire(wire, shape)
+
+    def encode(self, cstate, shared, key, wire, static, mode):
+        inner_st, mem = cstate
+        injected = wire + mem
+        inner_st2, recon, stats = self.inner.encode(
+            inner_st, shared, key, injected, static, mode)
+        return (inner_st2, injected - recon), recon, stats
+
+    def reduce_stats(self, stats):
+        return self.inner.reduce_stats(stats)
+
+    def update_shared(self, shared, reduced_stats, mean_wire):
+        return self.inner.update_shared(shared, reduced_stats, mean_wire)
+
+    def init_static(self):
+        return self.inner.init_static()
+
+    def next_static(self, reduced, static):
+        return self.inner.next_static(reduced, static)
+
+    def charge_bits(self, reduced, n_sel, static):
+        return self.inner.charge_bits(reduced, n_sel, static)
+
+    def host_metrics(self, reduced, n_sel, static):
+        return self.inner.host_metrics(reduced, n_sel, static)

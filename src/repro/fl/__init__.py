@@ -1,10 +1,13 @@
 """repro.fl -- federated-learning runtime.
 
-  * compression -- uplink methods over model-update pytrees (GradESTC + baselines)
+  * compression -- method shells over the stateless codec protocol
+                   (``repro.core.codecs``) + the shared RoundAccountant
+                   (exact integer-bit charging, Formula-13 statics)
   * simulation  -- benchmark-scale round runtime with exact byte accounting
                    (entry point; dispatches between the two engines)
-  * engine      -- fused client-parallel round: one jitted XLA program per
-                   round, one host sync (DESIGN.md Sec. 8)
+  * engine      -- fused client-parallel round, generic over any codec:
+                   one jitted XLA program per round (uplink + downlink),
+                   one host sync (DESIGN.md Sec. 8)
 
 The production SPMD round step (clients = mesh data-axis groups, compressed
 all-gather aggregation) lives in ``repro.launch``.

@@ -1,367 +1,176 @@
-"""Uplink compression methods over model-update pytrees.
+"""Uplink compression methods as thin shells over the stateless codecs.
 
-Bridges ``core/`` (which works on single (l, m) matrices) to whole-model
-updates: each method consumes ``{group_path: delta_array}`` for one client
-and returns the server-side reconstruction plus exact transmitted scalars.
+A *method* (``make_method``) is host-side configuration only: it knows how
+to build one :class:`repro.core.codecs.Codec` per parameter group
+(``build_codec``).  All array state -- per-client bases, error memories,
+rSVD key chains, the SVDFed shared basis -- lives in explicit codec state
+pytrees owned by the round engines, so the same codec runs vmapped over
+the client axis inside the fused single-XLA-program round *and* per client
+in the reference loop.  (The old ``*Method`` classes kept that state in
+Python dicts keyed by ``(client, path)``, which is why only GradESTC could
+run fused before.)
 
-GradESTC state is vmapped over the stacked layer axis of each parameter
-group (one compressor-decompressor pair per layer per group, exactly the
-paper's "each client has multiple compressors" -- Sec. III).  The dynamic
-candidate count ``d`` is adjusted on the host per group (Formula 13) and
-bucketed to powers of two to bound recompilation (DESIGN.md).
+:class:`RoundAccountant` is the host half of the protocol, shared by both
+engines: it consumes the one packed int32 stats vector a round produces,
+charges the ledger in exact integer-bit arithmetic, and advances each
+codec's per-round static config (GradESTC's Formula 13 candidate count,
+for uplink and downlink codecs alike).  Byte parity between the engines is
+by construction -- there is exactly one charging code path.
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
-from repro.core import gradestc as ge
-from repro.core.error_feedback import EFState, ef_inject, ef_update
-from repro.core.metrics import host_fetch
+from repro.core.codecs import (
+    Codec, EFCodec, FedPAQCodec, FedQClipCodec, GradESTCCodec,
+    SERVER_CLIENT_ID, SignSGDCodec, SVDFedCodec, TopKCodec,
+    client_layer_keys, round_base_key,
+)
 from repro.core.policy import CompressionPolicy, LayerPlan
-from repro.core.reshaping import matrix_to_tensor, reshape_to_matrix
 
 __all__ = [
-    "make_method", "client_layer_keys", "path_index",
+    "make_method", "client_layer_keys", "round_base_key", "path_index",
+    "build_codecs", "build_downlink_codecs", "pack_round_stats",
+    "RoundAccountant",
     "FedAvgMethod", "TopKMethod", "FedPAQMethod", "SignSGDMethod",
     "FedQClipMethod", "SVDFedMethod", "GradESTCMethod",
 ]
 
-Deltas = Dict[str, jnp.ndarray]
-
-
-def _tree_scalars(deltas: Deltas) -> float:
-    return float(sum(np.prod(v.shape) for v in deltas.values()))
-
-
-class FedAvgMethod:
-    """Uncompressed reference."""
-
-    name = "fedavg"
-
-    def __init__(self, **_):
-        pass
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        return deltas, _tree_scalars(deltas)
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def _topk_flat(mem, flat, k: int):
-    st, ghat, sc = bl.topk_compress(bl.TopKState(mem), flat, k)
-    return st.memory, ghat, sc
-
-
-class TopKMethod:
-    """Per-tensor magnitude top-k with error memory (ref [23])."""
-
-    name = "topk"
-
-    def __init__(self, frac: float = 0.1, **_):
-        self.frac = frac
-        self.mem: Dict[Tuple[int, str], jnp.ndarray] = {}
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        for path, v in deltas.items():
-            flat = v.reshape(-1)
-            k = max(1, int(self.frac * flat.size))
-            mem = self.mem.get((client, path), jnp.zeros_like(flat))
-            mem, ghat, sc = _topk_flat(mem, flat, k)
-            self.mem[(client, path)] = mem
-            recon[path] = ghat.reshape(v.shape)
-            scalars += float(sc)
-        return recon, scalars
-
-
-class FedPAQMethod:
-    """Stochastic 8-bit quantization of every tensor (ref [21])."""
-
-    name = "fedpaq"
-
-    def __init__(self, bits: int = 8, **_):
-        self.bits = bits
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        keys = jax.random.split(key, len(deltas))
-        for kk, (path, v) in zip(keys, sorted(deltas.items())):
-            _, ghat, sc = bl.fedpaq_compress(bl.QuantState(), v.reshape(-1), kk, self.bits)
-            recon[path] = ghat.reshape(v.shape).astype(v.dtype)
-            scalars += float(sc)
-        return recon, scalars
-
-
-class SignSGDMethod:
-    name = "signsgd"
-
-    def __init__(self, **_):
-        pass
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        for path, v in deltas.items():
-            ghat, sc = bl.sign_compress(v.reshape(-1))
-            recon[path] = ghat.reshape(v.shape).astype(v.dtype)
-            scalars += float(sc)
-        return recon, scalars
-
-
-class FedQClipMethod:
-    """Clipped + quantized updates (ref [42])."""
-
-    name = "fedqclip"
-
-    def __init__(self, clip: float = 100.0, bits: int = 8, **_):
-        self.clip = clip
-        self.bits = bits
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        keys = jax.random.split(key, len(deltas))
-        for kk, (path, v) in zip(keys, sorted(deltas.items())):
-            ghat, sc = bl.fedqclip_compress(v.reshape(-1), kk, self.clip, self.bits)
-            recon[path] = ghat.reshape(v.shape).astype(v.dtype)
-            scalars += float(sc)
-        return recon, scalars
-
-
-# --------------------------------------------------------------------------
-# SVDFed: globally shared per-group basis (ref [12])
-# --------------------------------------------------------------------------
-
-@dataclass
-class _SVDFedGroup:
-    M: Optional[jnp.ndarray] = None       # (L, l, k) shared basis
-    want_refresh: bool = True
-    pending: list = field(default_factory=list)   # G matrices this round
-
-
-class SVDFedMethod:
-    """Shared basis fit by the server from aggregated gradients; clients
-    upload coefficients between refits.  A refit round costs full uplink
-    (clients ship raw G so the server can re-fit), matching SVDFed's
-    calibration rounds."""
-
-    name = "svdfed"
-
-    def __init__(self, policy: CompressionPolicy, gamma: float = 8.0, seed: int = 0, **_):
-        self.policy = policy
-        self.gamma = gamma
-        self.groups: Dict[str, _SVDFedGroup] = {}
-        self.key = jax.random.PRNGKey(seed + 17)
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        for path, v in deltas.items():
-            plan = self.policy.plans.get(path)
-            if plan is None or not plan.compress:
-                recon[path] = v
-                scalars += v.size
-                continue
-            st = self.groups.setdefault(path, _SVDFedGroup())
-            GL = _to_matrices(v, plan)                       # (L, l, m)
-            if st.want_refresh or st.M is None:
-                st.pending.append(GL)
-                recon[path] = v                              # raw uplink
-                scalars += v.size
-            else:
-                A = jnp.einsum("xlk,xlm->xkm", st.M, GL)
-                Ghat = jnp.einsum("xlk,xkm->xlm", st.M, A)
-                E = GL - Ghat
-                rel = float(jnp.sqrt(jnp.sum(E * E) / jnp.maximum(jnp.sum(GL * GL), 1e-30)))
-                if rel > self.gamma / 100.0:
-                    st.want_refresh = True
-                recon[path] = _from_matrices(Ghat, plan, v.shape)
-                scalars += plan.k * plan.m * plan.stack
-        return recon, scalars
-
-    def end_round(self):
-        """Server-side: refit bases queued for refresh."""
-        for path, st in self.groups.items():
-            if st.pending:
-                G_agg = sum(st.pending) / len(st.pending)
-                self.key, sub = jax.random.split(self.key)
-                plan = self.policy.plans[path]
-                U = jax.vmap(
-                    lambda g, kk: _rsvd_basis(kk, g, plan.k)
-                )(G_agg, jax.random.split(sub, G_agg.shape[0]))
-                st.M = U
-                st.pending = []
-                st.want_refresh = False
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def _rsvd_basis(key, G, k: int):
-    from repro.core.rsvd import randomized_svd
-    U, _, _ = randomized_svd(key, G, rank=k)
-    return U
-
-
-# --------------------------------------------------------------------------
-# GradESTC (the paper) + ablation variants
-# --------------------------------------------------------------------------
 
 def path_index(policy: CompressionPolicy) -> Dict[str, int]:
     """Stable group-name -> int map (sorted order) for PRNG key derivation."""
     return {name: i for i, name in enumerate(sorted(policy.plans))}
 
 
-def client_layer_keys(seed: int, client, path_idx, L: int) -> jnp.ndarray:
-    """Per-(client, group) rSVD key stack, one key per stacked layer.
+class _MethodShell:
+    """Host-side method config.  ``build_codec`` returns the codec for one
+    parameter group, or ``None`` when that group ships raw."""
 
-    Derived with ``fold_in`` chains only -- NOT Python ``hash()``, whose
-    string hashing is salted by ``PYTHONHASHSEED`` and therefore differs
-    across processes.  ``client``/``path_idx`` may be traced int32 scalars,
-    so the same derivation runs inside the fused engine's jitted round and
-    in the host reference loop, producing identical streams.
-    """
-    if isinstance(client, int):
-        client &= 0xFFFFFFFF    # server-side codecs use client=-1
-    base = jax.random.fold_in(
-        jax.random.fold_in(jax.random.PRNGKey(seed), client), path_idx
-    )
-    return jax.random.split(base, L)
+    name = "?"
+
+    def __init__(self, seed: int = 0, **_):
+        self.seed = seed
+
+    def build_codec(self, path: str, plan: LayerPlan, path_idx: int,
+                    use_pallas: bool = False,
+                    pallas_interpret: Optional[bool] = None) -> Optional[Codec]:
+        raise NotImplementedError
 
 
-def _to_matrices(v: jnp.ndarray, plan: LayerPlan) -> jnp.ndarray:
-    """Stacked delta (L, *shape) (or (*shape,) for stack=1) -> (L, l, m)."""
-    L = plan.stack
-    flat = v.reshape(L, -1)
-    m = plan.n // plan.l
-    return flat.reshape(L, m, plan.l).swapaxes(-1, -2)   # columns = segments
+class FedAvgMethod(_MethodShell):
+    """Uncompressed reference: every group ships raw."""
+
+    name = "fedavg"
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        return None
 
 
-def _from_matrices(GL: jnp.ndarray, plan: LayerPlan, shape) -> jnp.ndarray:
-    L = plan.stack
-    flat = GL.swapaxes(-1, -2).reshape(L, plan.n)
-    return flat.reshape(shape)
+class TopKMethod(_MethodShell):
+    """Per-tensor magnitude top-k with error memory (ref [23])."""
+
+    name = "topk"
+
+    def __init__(self, frac: float = 0.1, **kw):
+        super().__init__(**kw)
+        self.frac = frac
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        return TopKCodec(plan.raw_scalars, frac=self.frac, path_idx=path_idx)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _ge_init_group(keys, GL, k: int):
-    def one(key, G):
-        st = ge.CompressorState(M=jnp.zeros((G.shape[0], k), G.dtype), key=key,
-                                initialized=jnp.zeros((), jnp.bool_))
-        st2, payload, stats = ge.compress_init(st, G, k=k)
-        return st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs), stats.d_r
-    M, keys2, Ghat, d_r = jax.vmap(one)(keys, GL)
-    return M, keys2, Ghat, d_r
+class FedPAQMethod(_MethodShell):
+    """Stochastic uniform quantization of every tensor (ref [21])."""
+
+    name = "fedpaq"
+
+    def __init__(self, bits: int = 8, **kw):
+        super().__init__(**kw)
+        self.bits = bits
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        return FedPAQCodec(plan.raw_scalars, bits=self.bits, path_idx=path_idx,
+                           use_pallas=use_pallas,
+                           pallas_interpret=pallas_interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "d"))
-def _ge_update_group(M, keys, GL, k: int, d: int):
-    def one(Mi, key, G):
-        st = ge.CompressorState(M=Mi, key=key, initialized=jnp.ones((), jnp.bool_))
-        st2, payload, stats = ge.compress_update(st, G, k=k, d=d)
-        return st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs), stats.d_r, stats.recon_err
-    M2, keys2, Ghat, d_r, err = jax.vmap(one)(M, keys, GL)
-    return M2, keys2, Ghat, d_r, err
+class SignSGDMethod(_MethodShell):
+    name = "signsgd"
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        return SignSGDCodec(plan.raw_scalars, path_idx=path_idx)
 
 
-class GradESTCMethod:
+class FedQClipMethod(_MethodShell):
+    """Clipped + quantized updates (ref [42])."""
+
+    name = "fedqclip"
+
+    def __init__(self, clip: float = 100.0, bits: int = 8, **kw):
+        super().__init__(**kw)
+        self.clip = clip
+        self.bits = bits
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        return FedQClipCodec(plan.raw_scalars, clip=self.clip, bits=self.bits,
+                             path_idx=path_idx, use_pallas=use_pallas,
+                             pallas_interpret=pallas_interpret)
+
+
+class SVDFedMethod(_MethodShell):
+    """Shared server-fit basis, coefficient uplink between refits (ref [12])."""
+
+    name = "svdfed"
+
+    def __init__(self, policy: CompressionPolicy, gamma: float = 8.0, **kw):
+        super().__init__(**kw)
+        self.policy = policy
+        self.gamma = gamma
+
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        if not plan.compress:
+            return None
+        return SVDFedCodec(plan, gamma=self.gamma, seed=self.seed,
+                           path_idx=path_idx)
+
+
+class GradESTCMethod(_MethodShell):
     """The paper's method.  variant in {"full", "first", "all", "k"}
     (Table IV ablations); ``ef`` enables error feedback (beyond-paper)."""
 
     name = "gradestc"
 
-    def __init__(
-        self, policy: CompressionPolicy, variant: str = "full",
-        alpha: float = 1.3, beta: float = 1.0, ef: bool = False,
-        seed: int = 0, **_,
-    ):
+    def __init__(self, policy: CompressionPolicy, variant: str = "full",
+                 alpha: float = 1.3, beta: float = 1.0, ef: bool = False,
+                 **kw):
         assert variant in ("full", "first", "all", "k")
+        super().__init__(**kw)
         self.policy = policy
         self.variant = variant
         self.alpha, self.beta = alpha, beta
         self.ef = ef
-        self.seed = seed
-        self._path_idx = path_index(policy)
-        # per (client, group): basis stack, rng keys, EF memory
-        self.M: Dict[Tuple[int, str], jnp.ndarray] = {}
-        self.keys: Dict[Tuple[int, str], jnp.ndarray] = {}
-        # candidate count d is per *group*, shared by all clients (matching
-        # the fused engine's single static d per compiled round); Formula 13
-        # re-buckets it at end_round() from the round's max d_r.
-        self.d: Dict[str, int] = {}
-        self._round_drmax: Dict[str, int] = {}
-        self.efmem: Dict[Tuple[int, str], jnp.ndarray] = {}
-        self.sum_d = 0          # computational-overhead proxy (Table IV)
-        self.last_err: Dict[str, float] = {}
 
-    def _keys_for(self, client: int, path: str, L: int):
-        kk = (client, path)
-        if kk not in self.keys:
-            self.keys[kk] = client_layer_keys(
-                self.seed, client, self._path_idx[path], L
-            )
-        return self.keys[kk]
-
-    def round_payload(self, client: int, deltas: Deltas, key, rnd: int):
-        recon, scalars = {}, 0.0
-        for path, v in sorted(deltas.items()):
-            plan = self.policy.plans.get(path)
-            if plan is None or not plan.compress:
-                recon[path] = v
-                scalars += v.size
-                continue
-            kk = (client, path)
-            GL = _to_matrices(v, plan).astype(jnp.float32)
-            L, k = plan.stack, plan.k
-            keys = self._keys_for(client, path, L)
-            if self.ef:
-                mem = self.efmem.get(kk)
-                if mem is not None:
-                    GL = GL + mem
-            first_round = kk not in self.M
-
-            if first_round or self.variant == "all":
-                M, keys2, Ghat, d_r = _ge_init_group(keys, GL, k)
-                self.M[kk], self.keys[kk] = M, keys2
-                scalars += plan.init_scalars
-                self.d.setdefault(path, max(1, k // 4))
-                self.sum_d += k * L
-            elif self.variant == "first":
-                M = self.M[kk]
-                A = jnp.einsum("xlk,xlm->xkm", M, GL)
-                Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
-                scalars += plan.k * plan.m * L
-            else:
-                d = k if self.variant == "k" else self.d[path]
-                M2, keys2, Ghat, d_r, err = _ge_update_group(
-                    self.M[kk], keys, GL, k, d
-                )
-                self.M[kk], self.keys[kk] = M2, keys2
-                self.sum_d += d * L
-                dr_arr = host_fetch(d_r)
-                scalars += float(np.sum(plan.k * plan.m + dr_arr * plan.l + dr_arr))
-                self.last_err[path] = float(host_fetch(jnp.mean(err)))
-                if self.variant == "full":
-                    self._round_drmax[path] = max(
-                        self._round_drmax.get(path, 0), int(dr_arr.max())
-                    )
-
-            if self.ef:
-                self.efmem[kk] = GL - Ghat
-            recon[path] = _from_matrices(Ghat, plan, v.shape).astype(v.dtype)
-        return recon, scalars
-
-    def end_round(self):
-        """Formula 13 on the round's max d_r per group -- the same shared-d
-        re-bucketing decision the fused engine takes from its single packed
-        host transfer."""
-        for path, drmax in self._round_drmax.items():
-            self.d[path] = ge.next_candidate_count(
-                drmax, self.policy.plans[path].k, self.alpha, self.beta
-            )
-        self._round_drmax = {}
+    def build_codec(self, path, plan, path_idx, use_pallas=False,
+                    pallas_interpret=None):
+        if not plan.compress:
+            return None
+        codec = GradESTCCodec(plan, seed=self.seed, path_idx=path_idx,
+                              variant=self.variant, alpha=self.alpha,
+                              beta=self.beta, use_pallas=use_pallas,
+                              pallas_interpret=pallas_interpret)
+        if self.ef:
+            codec = EFCodec(codec, (plan.stack, plan.l, plan.m))
+        return codec
 
 
 def make_method(name: str, policy: Optional[CompressionPolicy] = None, **kw):
@@ -391,3 +200,116 @@ def make_method(name: str, policy: Optional[CompressionPolicy] = None, **kw):
                 variant = suffix
         return GradESTCMethod(policy, variant=variant, ef=ef, **kw)
     raise ValueError(f"unknown method {name!r}")
+
+
+def build_codecs(method, policy: CompressionPolicy, group_paths,
+                 use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None) -> Dict[str, Codec]:
+    """One codec per compressed group; paths absent from the result ship raw."""
+    pidx = path_index(policy)
+    out: Dict[str, Codec] = {}
+    for path in group_paths:
+        codec = method.build_codec(path, policy.plans[path], pidx[path],
+                                   use_pallas, pallas_interpret)
+        if codec is not None:
+            out[path] = codec
+    return out
+
+
+def build_downlink_codecs(policy: CompressionPolicy, group_paths, seed: int,
+                          use_pallas: bool = False,
+                          pallas_interpret: Optional[bool] = None,
+                          ) -> Dict[str, Codec]:
+    """The shared server-side GradESTC codec compressing the broadcast
+    (``FLConfig.downlink_compress``); one 'client' with id
+    ``SERVER_CLIENT_ID``, seeded independently of the uplink codecs."""
+    method = make_method("gradestc", policy=policy, seed=seed + 101)
+    return build_codecs(method, policy, group_paths, use_pallas,
+                        pallas_interpret)
+
+
+def pack_round_stats(reds: Dict[str, jnp.ndarray],
+                     dl_reds: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """The round's packed stats vector: reduced int32 stats per sorted
+    uplink path, then per sorted downlink path.  Both engines build the
+    transfer through this one function so the layout
+    ``RoundAccountant.consume`` unpacks cannot drift between them.
+    Stats-free rounds still ship a one-element placeholder -- the single
+    measured host sync stays uniform across methods."""
+    parts = ([reds[p] for p in sorted(reds)]
+             + [dl_reds[p] for p in sorted(dl_reds)])
+    if parts and sum(int(p.size) for p in parts):
+        return jnp.concatenate(parts)
+    return jnp.zeros((1,), jnp.int32)
+
+
+class RoundAccountant:
+    """Host half of the codec protocol, shared verbatim by both engines.
+
+    Consumes the round's packed int32 stats vector (the single measured
+    ``host_fetch``), charges uplink/downlink in exact integer bits, merges
+    host metrics (``sum_d``), and advances each codec's static config
+    (Formula 13).  ``static_args()`` yields the hashable maps the fused
+    engine passes as jit-static arguments.
+    """
+
+    def __init__(self, codecs: Dict[str, Codec], dl_codecs: Dict[str, Codec],
+                 policy: CompressionPolicy, group_paths, n_sel: int,
+                 downlink_enabled: bool = False):
+        self.codecs = {p: codecs[p] for p in sorted(codecs)}
+        self.dl_codecs = {p: dl_codecs[p] for p in sorted(dl_codecs)}
+        self.n_sel = n_sel
+        self.downlink_enabled = downlink_enabled
+        self.statics = {p: c.init_static() for p, c in self.codecs.items()}
+        self.dl_statics = {p: c.init_static() for p, c in self.dl_codecs.items()}
+        self.metrics: Dict[str, int] = {}
+        self.raw_scalars_per_client = sum(
+            policy.plans[p].raw_scalars for p in group_paths if p not in codecs
+        )
+        self.model_scalars = sum(
+            policy.plans[p].raw_scalars for p in group_paths
+        )
+        self.dl_raw_scalars = sum(
+            policy.plans[p].raw_scalars for p in group_paths
+            if p not in dl_codecs
+        )
+        self.packed_len = (sum(c.stats_len for c in self.codecs.values())
+                           + sum(c.stats_len for c in self.dl_codecs.values()))
+
+    def static_args(self):
+        """(uplink_static_map, downlink_static_map) as hashable tuples."""
+        return (tuple(sorted(self.statics.items())),
+                tuple(sorted(self.dl_statics.items())))
+
+    def consume(self, packed: np.ndarray, ledger, rnd: int) -> None:
+        """Charge the ledger from the fetched stats and advance statics."""
+        packed = np.asarray(packed).reshape(-1)
+        expected = max(self.packed_len, 1)    # pack_round_stats placeholder
+        if packed.size != expected:
+            raise ValueError(
+                f"packed stats layout drift: got {packed.size} entries, "
+                f"expected {expected} -- engine packing disagrees with the "
+                f"registered codecs")
+        off = 0
+        bits = 32 * self.raw_scalars_per_client * self.n_sel
+        for path, codec in self.codecs.items():
+            red = packed[off: off + codec.stats_len]
+            off += codec.stats_len
+            st = self.statics[path]
+            bits += codec.charge_bits(red, self.n_sel, st)
+            for k, v in codec.host_metrics(red, self.n_sel, st).items():
+                self.metrics[k] = self.metrics.get(k, 0) + v
+            self.statics[path] = codec.next_static(red, st)
+        ledger.charge_uplink(bits / 32.0, group=f"round{rnd}")
+
+        if self.downlink_enabled:
+            dbits = 32 * self.dl_raw_scalars
+            for path, codec in self.dl_codecs.items():
+                red = packed[off: off + codec.stats_len]
+                off += codec.stats_len
+                st = self.dl_statics[path]
+                dbits += codec.charge_bits(red, 1, st)
+                self.dl_statics[path] = codec.next_static(red, st)
+            ledger.charge_downlink((dbits / 32.0) * self.n_sel)
+        else:
+            ledger.charge_downlink(self.model_scalars * self.n_sel)

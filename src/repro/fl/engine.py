@@ -1,29 +1,32 @@
 """Fused client-parallel FL round engine (DESIGN.md Sec. 8).
 
-One FL round == one jitted XLA program:
+One FL round == one jitted XLA program, for **every** uplink method:
 
   * local training is ``vmap``-ed over the selected-client axis (the exact
     ``make_local_train`` step the reference loop uses, so per-client math is
     unchanged);
-  * GradESTC compressor state lives as a stacked pytree
-    ``{path: (n_clients, L, l, k)}`` instead of per-``(client, path)`` Python
-    dicts, so compression for a whole parameter group across all selected
-    clients is a single ``vmap(vmap(step))``;
-  * reconstruction, client averaging, and the server parameter update happen
-    in-jit;
-  * exactly **one** device->host transfer leaves the program per round: a
-    packed stats vector carrying the per-group uplink scalar counts (exact
-    Formula 14 accounting for the ``CommLedger``) and the per-group max
-    ``d_r`` / update counts that drive the host-side Formula 13 re-bucketing
-    of the candidate count ``d``.
+  * compression is method-generic: each parameter group's
+    :class:`repro.core.codecs.Codec` is vmapped over the client axis --
+    GradESTC's stacked ``(C, L, l, k)`` bases, the per-tensor baselines'
+    stacked ``(C, n)`` flat vectors, SVDFed's shared server basis -- so one
+    ``vmap(codec.encode)`` covers all selected clients per group;
+  * reconstruction, client averaging, the optional in-jit **downlink codec**
+    (the shared server-side GradESTC compressor), and the server parameter
+    update all happen inside the same program;
+  * exactly **one** device->host transfer leaves the program per round: the
+    packed int32 stats vector (per-group codec stats, uplink and downlink),
+    which :class:`repro.fl.compression.RoundAccountant` -- shared verbatim
+    with the reference loop -- turns into exact integer-bit ledger charges
+    and the next round's static codec config (Formula 13).
 
-``d`` is a static argument of the compiled round (XLA needs static shapes
-for the rSVD sketch), so the engine keeps a host dict ``{path: d}`` and
-retraces only when Formula 13 actually moves a group to a new power-of-two
-bucket -- the same bounded-recompilation contract as the reference loop.
+Static per-round config (GradESTC's rSVD candidate count ``d``) travels as
+hashable ``(path, static)`` tuples, so the engine retraces only when
+Formula 13 actually moves a group to a new power-of-two bucket -- the same
+bounded-recompilation contract as the reference loop.
 
 The per-client Python loop (``simulation._run_fl_loop``) stays as the parity
-oracle; ``tests/test_round_engine.py`` pins the two engines to each other.
+oracle; ``tests/test_round_engine.py`` pins the two engines to each other
+for all seven methods.
 """
 
 from __future__ import annotations
@@ -36,16 +39,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gradestc as ge
+from repro.core.codecs import SERVER_CLIENT_ID
 from repro.core.metrics import host_fetch
-from repro.core.policy import CompressionPolicy, LayerPlan
 
 from .compression import (
-    GradESTCMethod,
-    _from_matrices,
-    _to_matrices,
-    client_layer_keys,
-    path_index,
+    RoundAccountant,
+    build_codecs,
+    build_downlink_codecs,
+    pack_round_stats,
+    round_base_key,
 )
 from .simulation import (
     FLConfig,
@@ -59,147 +61,90 @@ from .simulation import (
 __all__ = ["run_fl_fused"]
 
 
-# --------------------------------------------------------------------------
-# (client, L, ...) matrix views -- the loop engine's transforms, vmapped
-# over the client axis so the "columns = segments" layout lives in exactly
-# one place (compression.py) for both engines.
-# --------------------------------------------------------------------------
+def _build_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
+                 group_paths):
+    """Returns a jitted ``round_fn`` generic over the codec dicts.
 
-def _stack_to_matrices(v: jnp.ndarray, plan: LayerPlan) -> jnp.ndarray:
-    """(C, L, *shape) or (C, *shape) group delta -> (C, L, l, m) matrices."""
-    return jax.vmap(lambda x: _to_matrices(x, plan))(v)
-
-
-# --------------------------------------------------------------------------
-# per-(client, layer) compression step
-# --------------------------------------------------------------------------
-
-def _make_layer_step(k: int, d: int, variant: str, mode: str, use_pallas: bool,
-                     pallas_interpret: Optional[bool]):
-    """Single-layer compress step.  Returns ``(M', key', Ghat, d_r, was_init)``.
-
-    ``mode`` statically selects the round's branch structure: the host knows
-    deterministically which clients have initialized compressors (a client
-    inits on its first selection), so the common rounds compile WITHOUT a
-    ``lax.cond`` -- crucial because a vmapped cond lowers to a select that
-    executes *both* branches for every (client, layer), i.e. a full extra
-    rSVD per steady-state round:
-
-    * ``"init"``   -- every selected client uninitialized (round 0).
-    * ``"update"`` -- every selected client initialized (the steady state).
-    * ``"mixed"``  -- stragglers under partial participation; keeps the cond.
-    """
-
-    def _init(st, G):
-        st2, payload, stats = ge.compress_init(st, G, k=k)
-        return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
-                stats.d_r, jnp.ones((), jnp.bool_))
-
-    def _update(st, G):
-        st2, payload, stats = ge.compress_update(
-            st, G, k=k, d=d, use_pallas=use_pallas,
-            pallas_interpret=pallas_interpret,
-        )
-        return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
-                stats.d_r, jnp.zeros((), jnp.bool_))
-
-    def _project(st, G):
-        # GradESTC-first ablation: frozen basis, coefficients only.
-        A = st.M.T @ G
-        return (st.M, st.key, st.M @ A,
-                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_))
-
-    steady = _project if variant == "first" else _update
-
-    def step(M, key, initialized, G):
-        st = ge.CompressorState(M=M, key=key, initialized=initialized)
-        if variant == "all" or mode == "init":
-            return _init(st, G)
-        if mode == "update":
-            return steady(st, G)
-        return jax.lax.cond(initialized, steady, _init, st, G)
-
-    return step
-
-
-# --------------------------------------------------------------------------
-# the fused round
-# --------------------------------------------------------------------------
-
-def _build_round(arch, lr: float, server_lr: float, policy: CompressionPolicy,
-                 group_paths, variant: Optional[str], ef: bool,
-                 use_pallas: bool, pallas_interpret: Optional[bool]):
-    """Returns a jitted ``round_fn(params, state, batches, sel, d_map)``.
-
-    ``d_map`` is a hashable tuple of ``(path, d)`` pairs -- the only static
-    input that changes across rounds (bucketed powers of two).  ``state`` is
-    the stacked compressor pytree ``(M, keys, initialized, efmem)``.
+    ``static_map`` / ``dl_static_map`` are hashable ``(path, static)``
+    tuples -- the only static inputs that change across rounds (bucketed
+    powers of two for GradESTC's ``d``; ``None`` for static-free codecs).
+    ``mode`` / ``dl_mode`` statically select the init/update branch
+    structure for codecs with an init branch (see ``GradESTCCodec``).
     """
     local_train = make_local_train(arch, lr)
-    compressed = [p for p in group_paths
-                  if policy.plans[p].compress] if variant is not None else []
 
-    @functools.partial(jax.jit, static_argnames=("d_map", "mode", "full_part"))
-    def round_fn(params, state, batches, sel, d_map, mode, full_part):
-        d_of = dict(d_map)
-        M, keys, inited, efmem = state
+    @functools.partial(jax.jit, static_argnames=(
+        "static_map", "dl_static_map", "mode", "dl_mode", "full_part"))
+    def round_fn(params, cstate, shared, dl_state, batches, sel, base_key,
+                 static_map, dl_static_map, mode, dl_mode, full_part):
+        static_of = dict(static_map)
+        dl_static_of = dict(dl_static_map)
 
         def take(x):
             return x if full_part else x[sel]
 
         def put(x, upd):
             return upd if full_part else x.at[sel].set(upd)
+
         locals_ = jax.vmap(local_train, in_axes=(None, 0))(params, batches)
         flat_g = _flatten_groups(params, group_paths)
         flat_l = _flatten_groups(locals_, group_paths)
 
+        new_cstate, new_shared = dict(cstate), dict(shared)
+        new_dl_state = dict(dl_state)
         recon_mean: Dict[str, jnp.ndarray] = {}
-        stats = {}           # per compressed path: (drmax, n_upd, sum_dr) i32
+        reds: Dict[str, jnp.ndarray] = {}
         for path in group_paths:
-            plan = policy.plans.get(path)
             delta = flat_l[path] - flat_g[path][None]          # (C_sel, ...)
-            if path not in compressed:
+            codec = codecs.get(path)
+            if codec is None:
                 recon_mean[path] = jnp.sum(delta, 0) / delta.shape[0]
                 continue
-            k = plan.k
-            GL = _stack_to_matrices(delta, plan).astype(jnp.float32)
-            if ef:
-                GL = GL + take(efmem[path])
-            step = _make_layer_step(k, d_of[path], variant, mode, use_pallas,
-                                    pallas_interpret)
-            M2, K2, Ghat, d_r, was_init = jax.vmap(jax.vmap(step))(
-                take(M[path]), take(keys[path]), take(inited[path]), GL
+            wire = jax.vmap(codec.to_wire)(delta)
+            ckeys = jax.vmap(
+                lambda c, _co=codec: _co.per_client_key(base_key, c)
+            )(sel)
+            enc = functools.partial(codec.encode,
+                                    static=static_of.get(path), mode=mode)
+            cst = jax.tree.map(take, cstate[path])
+            cst2, recon, stats = jax.vmap(enc, in_axes=(0, None, 0, 0))(
+                cst, shared[path], ckeys, wire
             )
-            M = {**M, path: put(M[path], M2)}
-            keys = {**keys, path: put(keys[path], K2)}
-            inited = {**inited,
-                      path: put(inited[path], jnp.ones_like(was_init))}
-            if ef:
-                efmem = {**efmem, path: put(efmem[path], GL - Ghat)}
-            # Per-(client, layer) d_r on update branches; inits (d_r == k)
-            # are reported via the n_upd count instead, so the host can
-            # reconstruct Formula 14 in exact integer arithmetic.
-            upd_dr = jnp.where(was_init, 0, d_r)
-            stats[path] = (
-                jnp.max(upd_dr).astype(jnp.int32),
-                jnp.sum(~was_init).astype(jnp.int32),
-                jnp.sum(upd_dr).astype(jnp.int32),
-            )
-            recon_mean[path] = jax.vmap(
-                lambda g: _from_matrices(g, plan, flat_g[path].shape)
-            )(Ghat).astype(delta.dtype).sum(0) / delta.shape[0]
+            new_cstate[path] = jax.tree.map(put, cstate[path], cst2)
+            red = codec.reduce_stats(stats)
+            mean_wire = jnp.sum(recon, 0) / delta.shape[0]
+            new_shared[path] = codec.update_shared(shared[path], red,
+                                                   mean_wire)
+            recon_mean[path] = codec.from_wire(
+                mean_wire, flat_g[path].shape).astype(delta.dtype)
+            reds[path] = red
 
-        new_flat = {p: flat_g[p] + server_lr * recon_mean[p].astype(flat_g[p].dtype)
+        avg = {p: recon_mean[p] * server_lr for p in group_paths}
+
+        # Optional downlink codec: the server compresses the aggregated
+        # update once; every client mirrors the shared decompressor, so the
+        # server applies the *reconstruction* to stay bit-identical with
+        # clients -- all in-jit, its stats ride the same packed transfer.
+        dl_reds: Dict[str, jnp.ndarray] = {}
+        for path in group_paths:
+            dlc = dl_codecs.get(path)
+            if dlc is None:
+                continue
+            wire = dlc.to_wire(avg[path])
+            cst2, recon_w, stats = dlc.encode(
+                dl_state[path], (), base_key, wire,
+                static=dl_static_of.get(path), mode=dl_mode,
+            )
+            new_dl_state[path] = cst2
+            avg[path] = dlc.from_wire(
+                recon_w, avg[path].shape).astype(avg[path].dtype)
+            dl_reds[path] = dlc.reduce_stats(stats[None])
+
+        new_flat = {p: flat_g[p] + avg[p].astype(flat_g[p].dtype)
                     for p in group_paths}
         new_params = _set_groups(params, new_flat)
-        # Packed layout (matched on the host): [drmax, n_upd, sum_dr] per
-        # sorted compressed path.  Integer counts only -- the host rebuilds
-        # the Formula 14 scalar totals exactly (no f32 accumulation, which
-        # would round above 2^24 scalars/round at production client counts).
-        flat_stats = [x for p in sorted(stats) for x in stats[p]]
-        packed = (jnp.stack(flat_stats) if compressed
-                  else jnp.zeros((1,), jnp.int32))
-        return new_params, (M, keys, inited, efmem), packed
+        packed = pack_round_stats(reds, dl_reds)
+        return new_params, new_cstate, new_shared, new_dl_state, packed
 
     return round_fn
 
@@ -211,55 +156,41 @@ def run_fl_fused(cfg: FLConfig,
     arch, params, policy = su.arch, su.params, su.policy
     streams, eval_batches, eval_step = su.streams, su.eval_batches, su.eval_step
     ledger, rng, group_paths, n_sel = su.ledger, su.rng, su.group_paths, su.n_sel
-    # The method instance is reused purely as a config parser (variant/ef/
-    # alpha/beta defaults) so "gradestc-*" spellings behave identically here.
-    method = su.method
-    is_ge = isinstance(method, GradESTCMethod)
-    variant = method.variant if is_ge else None
-    ef = method.ef if is_ge else False
 
     use_pallas = (jax.default_backend() == "tpu"
                   if cfg.use_pallas is None else cfg.use_pallas)
-
-    comp_paths = [p for p in group_paths if policy.plans[p].compress] if is_ge else []
-    pidx = path_index(policy)
     C = cfg.n_clients
 
-    # ---- stacked compressor state ------------------------------------
-    M, keys, inited, efmem = {}, {}, {}, {}
-    d_of: Dict[str, int] = {}
-    for path in comp_paths:
-        plan = policy.plans[path]
-        L, l, k, m = plan.stack, plan.l, plan.k, plan.m
-        M[path] = jnp.zeros((C, L, l, k), jnp.float32)
-        keys[path] = jax.vmap(
-            lambda c, _i=pidx[path], _L=L: client_layer_keys(cfg.seed, c, _i, _L)
-        )(jnp.arange(C))
-        inited[path] = jnp.zeros((C, L), jnp.bool_)
-        if ef:
-            efmem[path] = jnp.zeros((C, L, l, m), jnp.float32)
-        d_of[path] = k if variant == "k" else max(1, k // 4)
-    state = (M, keys, inited, efmem)
+    codecs = build_codecs(su.method, policy, group_paths, use_pallas, None)
+    dl_codecs = (build_downlink_codecs(policy, group_paths, cfg.seed,
+                                       use_pallas, None)
+                 if cfg.downlink_compress else {})
+    acct = RoundAccountant(codecs, dl_codecs, policy, group_paths, n_sel,
+                           downlink_enabled=cfg.downlink_compress)
 
-    raw_scalars_per_client = sum(
-        policy.plans[p].raw_scalars for p in group_paths if p not in comp_paths
-    )
-    model_scalars = sum(policy.plans[p].raw_scalars for p in group_paths)
+    cstate = {p: c.init_client_state(C) for p, c in codecs.items()}
+    shared = {p: c.init_shared_state() for p, c in codecs.items()}
+    dl_state = {
+        p: jax.tree.map(lambda x: x[0],
+                        c.init_client_state(1, client_ids=[SERVER_CLIENT_ID]))
+        for p, c in dl_codecs.items()
+    }
 
-    round_fn = _build_round(arch, cfg.lr, cfg.server_lr, policy, group_paths,
-                            variant, ef, use_pallas, None)
+    round_fn = _build_round(arch, cfg.lr, cfg.server_lr, codecs, dl_codecs,
+                            group_paths)
 
     res = FLResult([], [], [], [], ledger, 0.0)
-    sum_d = 0
     round_wall = []
     # Host mirror of which clients hold an initialized compressor (a client
     # inits on first selection) -- lets the common rounds compile cond-free.
-    client_inited = np.zeros(cfg.n_clients, bool)
+    has_init = any(c.has_init_branch for c in codecs.values())
+    dl_has_init = any(c.has_init_branch for c in dl_codecs.values())
+    client_inited = np.zeros(C, bool)
 
     for rnd in range(cfg.rounds):
         t_round = time.perf_counter()
         ledger.begin_round()
-        sel = sorted(rng.choice(cfg.n_clients, size=n_sel, replace=False))
+        sel = sorted(rng.choice(C, size=n_sel, replace=False))
         # Assemble the round's (C_sel, steps, B, S) batch block on the host
         # and ship it in one transfer -- not one jnp.stack dispatch per
         # client (the streams yield CPU-backed arrays; np.asarray is cheap).
@@ -270,36 +201,23 @@ def run_fl_fused(cfg: FLConfig,
                                for kk in bs[0]})
         batches = {kk: jnp.asarray(np.stack([pc[kk] for pc in per_client]))
                    for kk in per_client[0]}
-        d_map = tuple(sorted(d_of.items()))
-        sel_inited = client_inited[sel]
-        mode = ("update" if sel_inited.all()
-                else "init" if not sel_inited.any() else "mixed")
-        client_inited[sel] = True
-        params, state, packed = round_fn(params, state, batches,
-                                         jnp.asarray(sel), d_map, mode,
-                                         n_sel == cfg.n_clients)
+        if has_init:
+            sel_inited = client_inited[sel]
+            mode = ("update" if sel_inited.all()
+                    else "init" if not sel_inited.any() else "mixed")
+            client_inited[sel] = True
+        else:
+            mode = "update"
+        dl_mode = "init" if (dl_has_init and rnd == 0) else "update"
+        up_map, dl_map = acct.static_args()
+        base_key = round_base_key(cfg.seed, rnd)
+        params, cstate, shared, dl_state, packed = round_fn(
+            params, cstate, shared, dl_state, batches, jnp.asarray(sel),
+            base_key, up_map, dl_map, mode, dl_mode, n_sel == C,
+        )
 
         # ---- the single host sync: ledger charge + Formula 13 --------
-        stats = host_fetch(packed)
-        uplink = raw_scalars_per_client * n_sel
-        for i, path in enumerate(sorted(comp_paths)):
-            drmax, n_upd, sum_dr = (int(x) for x in stats[3 * i: 3 * i + 3])
-            plan = policy.plans[path]
-            n_init = n_sel * plan.stack - n_upd
-            # Formula 14 in exact integer arithmetic: inits ship the basis
-            # (k*l) + coefficients, updates ship coefficients + the d_r
-            # entering vectors and their indices.
-            uplink += (n_init * (plan.k * plan.l + plan.k * plan.m)
-                       + n_upd * plan.k * plan.m + sum_dr * (plan.l + 1))
-            sum_d += plan.k * n_init
-            if variant in ("full", "k"):
-                sum_d += d_of[path] * n_upd
-            if variant == "full" and n_upd > 0:
-                d_of[path] = ge.next_candidate_count(
-                    drmax, plan.k, method.alpha, method.beta
-                )
-        ledger.charge_uplink(uplink, group=f"round{rnd}")
-        ledger.charge_downlink(model_scalars * n_sel)
+        acct.consume(host_fetch(packed), ledger, rnd)
         round_wall.append(time.perf_counter() - t_round)
 
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
@@ -316,6 +234,5 @@ def run_fl_fused(cfg: FLConfig,
     res.extra["engine"] = "fused"
     res.extra["use_pallas"] = use_pallas
     res.extra["round_wall_s"] = round_wall
-    if is_ge:
-        res.extra["sum_d"] = sum_d
+    res.extra.update(acct.metrics)
     return res

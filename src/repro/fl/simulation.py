@@ -6,16 +6,20 @@ SGD steps before uploading its model delta through the configured uplink
 compression method; the server averages reconstructed deltas and applies
 them with a server learning rate (1.0 = FedAvg).
 
-Two round engines share this entry point (DESIGN.md Sec. 8):
+Two round engines share this entry point (DESIGN.md Sec. 8), and both are
+generic over the stateless codec protocol (``repro.core.codecs``), so every
+method -- GradESTC, the six Table III baselines, and the optional downlink
+codec -- runs on either engine:
 
 * ``engine="fused"`` (default) -- the client-parallel single-XLA-program
   round in ``repro/fl/engine.py``: local training vmapped over clients,
-  stacked GradESTC state, in-jit aggregation, one host sync per round.
+  stacked codec state, in-jit aggregation and downlink compression, one
+  host sync per round.
 * ``engine="loop"``  -- the per-client Python reference loop below, kept as
-  the parity oracle (identical math, one dispatch per client per group).
-
-Methods the fused engine does not cover (the per-tensor baselines, downlink
-compression) fall back to the loop automatically.
+  the parity oracle (identical math, one dispatch per client per group, but
+  the same single packed-stats ``host_fetch`` per round -- byte accounting
+  shares ``RoundAccountant`` with the fused engine, so it is exact-integer
+  on both).
 
 The distributed SPMD path (pjit over the production mesh) lives in
 ``repro/launch`` -- this module is the algorithm-fidelity / communication-
@@ -24,7 +28,6 @@ accounting harness used by tests, benchmarks, and the examples.
 
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -33,14 +36,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import CommLedger
-from repro.core.policy import CompressionPolicy, make_policy
+from repro.core.codecs import SERVER_CLIENT_ID
+from repro.core.metrics import CommLedger, host_fetch
+from repro.core.policy import make_policy
 from repro.data import client_batch_stream, make_task
-from repro.models import count_params, loss_fn, model, param_group_shapes
+from repro.models import loss_fn, model, param_group_shapes
 from repro.models.config import ArchConfig
 from repro.optim import sgd
 
-from .compression import make_method
+from .compression import (
+    RoundAccountant,
+    build_codecs,
+    build_downlink_codecs,
+    make_method,
+    pack_round_stats,
+    round_base_key,
+)
 
 __all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch",
            "make_local_train", "make_eval_step"]
@@ -80,11 +91,12 @@ class FLConfig:
     coverage_target: float = 0.90
     min_params: int = 4096           # tiny model -> lower floor than prod
     #: "fused" = single-XLA-program client-parallel round (engine.py);
-    #: "loop" = per-client reference loop.  Fused falls back to loop for
-    #: methods it does not cover (per-tensor baselines, downlink codec).
+    #: "loop" = per-client reference loop (the parity oracle).  Every
+    #: method, including downlink compression, runs on either engine.
     engine: str = "fused"
-    #: route the GradESTC A/E projection through the Pallas kernel inside the
-    #: fused engine.  None = auto (True on TPU, False elsewhere).
+    #: route the compression hot paths through the Pallas kernels -- the
+    #: GradESTC A/E projection and the FedPAQ/FedQClip block quantizer.
+    #: None = auto (True on TPU, False elsewhere).
     use_pallas: Optional[bool] = None
 
 
@@ -177,11 +189,6 @@ def make_eval_step(arch: ArchConfig):
     return eval_step
 
 
-def _fused_supported(cfg: FLConfig) -> bool:
-    m = cfg.method.lower()
-    return (m == "fedavg" or m.startswith("gradestc")) and not cfg.downlink_compress
-
-
 @dataclass
 class _RunSetup:
     """Everything both engines must construct *identically* for parity:
@@ -230,7 +237,7 @@ def _setup_run(cfg: FLConfig) -> _RunSetup:
 def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
     if cfg.engine not in ("fused", "loop"):
         raise ValueError(f"unknown engine {cfg.engine!r} (want 'fused' or 'loop')")
-    if cfg.engine == "fused" and _fused_supported(cfg):
+    if cfg.engine == "fused":
         from .engine import run_fl_fused
 
         return run_fl_fused(cfg, progress)
@@ -240,16 +247,41 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
 def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
     t0 = time.time()
     su = _setup_run(cfg)
-    params, method, eval_step = su.params, su.method, su.eval_step
+    params, eval_step = su.params, su.eval_step
     streams, eval_batches, ledger = su.streams, su.eval_batches, su.ledger
     rng, group_paths, n_sel = su.rng, su.group_paths, su.n_sel
-    key = jax.random.PRNGKey(cfg.seed)
-    downlink_codec = (
-        make_method("gradestc", policy=su.policy, seed=cfg.seed + 101)
-        if cfg.downlink_compress else None
-    )
+    policy = su.policy
+    C = cfg.n_clients
+
+    use_pallas = (jax.default_backend() == "tpu"
+                  if cfg.use_pallas is None else cfg.use_pallas)
+    codecs = build_codecs(su.method, policy, group_paths, use_pallas, None)
+    dl_codecs = (build_downlink_codecs(policy, group_paths, cfg.seed,
+                                       use_pallas, None)
+                 if cfg.downlink_compress else {})
+    acct = RoundAccountant(codecs, dl_codecs, policy, group_paths, n_sel,
+                           downlink_enabled=cfg.downlink_compress)
+
+    cstate = {p: c.init_client_state(C) for p, c in codecs.items()}
+    shared = {p: c.init_shared_state() for p, c in codecs.items()}
+    dl_state = {
+        p: jax.tree.map(lambda x: x[0],
+                        c.init_client_state(1, client_ids=[SERVER_CLIENT_ID]))
+        for p, c in dl_codecs.items()
+    }
+    # One jitted encode per group: the reference loop keeps per-client
+    # dispatch granularity (that is what it measures) but not per-op
+    # eager overhead.
+    enc = {p: jax.jit(c.encode, static_argnames=("static", "mode"))
+           for p, c in codecs.items()}
+    upd_shared = {p: jax.jit(c.update_shared) for p, c in codecs.items()}
+    dl_enc = {p: jax.jit(c.encode, static_argnames=("static", "mode"))
+              for p, c in dl_codecs.items()}
 
     local_train = make_local_train(su.arch, cfg.lr)
+    has_init = {p: c.has_init_branch for p, c in codecs.items()}
+    dl_has_init = any(c.has_init_branch for c in dl_codecs.values())
+    client_inited = np.zeros(C, bool)
 
     res = FLResult([], [], [], [], ledger, 0.0)
     round_wall = []
@@ -257,45 +289,76 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
     for rnd in range(cfg.rounds):
         t_round = time.perf_counter()
         ledger.begin_round()
-        sel = sorted(rng.choice(cfg.n_clients, size=n_sel, replace=False))
-        acc_deltas: Optional[Dict[str, jnp.ndarray]] = None
+        sel = sorted(rng.choice(C, size=n_sel, replace=False))
+        base_key = round_base_key(cfg.seed, rnd)
+        statics, dl_statics = (dict(m) for m in acct.static_args())
+
+        raw_acc: Dict[str, jnp.ndarray] = {}
+        wire_acc: Dict[str, jnp.ndarray] = {}
+        stats_rows: Dict[str, list] = {p: [] for p in codecs}
+        flat_g = _flatten_groups(params, group_paths)
         for c in sel:
             bs = [next(streams[c]) for _ in range(cfg.local_steps)]
             batches = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
             local = local_train(params, batches)
-            delta = {
-                p: l - g for p, l, g in zip(
-                    group_paths,
-                    _flatten_groups(local, group_paths).values(),
-                    _flatten_groups(params, group_paths).values(),
-                )
-            }
-            key, sub = jax.random.split(key)
-            recon, scalars = method.round_payload(c, delta, sub, rnd)
-            ledger.charge_uplink(scalars, group=f"round{rnd}")
-            if acc_deltas is None:
-                acc_deltas = recon
-            else:
-                acc_deltas = {p: a + recon[p] for p, a in acc_deltas.items()}
-        if hasattr(method, "end_round"):
-            method.end_round()
-        avg = {p: (v / n_sel) * cfg.server_lr for p, v in acc_deltas.items()}
-        if downlink_codec is not None:
-            # server compresses the aggregated update once; every client
-            # mirrors the shared decompressor, so the server applies the
-            # *reconstruction* to stay bit-identical with clients.
-            key, sub = jax.random.split(key)
-            avg, dl_scalars = downlink_codec.round_payload(-1, avg, sub, rnd)
-            downlink_codec.end_round()    # Formula 13 for the shared codec too
-            ledger.charge_downlink(float(dl_scalars) * n_sel)
-        else:
-            ledger.charge_downlink(
-                sum(v.size for v in _flatten_groups(params, group_paths).values())
-                * n_sel)
-        flat = _flatten_groups(params, group_paths)
-        params = _set_groups(params, {p: flat[p] + avg[p].astype(flat[p].dtype)
+            flat_l = _flatten_groups(local, group_paths)
+            for path in group_paths:
+                delta = flat_l[path] - flat_g[path]
+                codec = codecs.get(path)
+                if codec is None:
+                    raw_acc[path] = (delta if path not in raw_acc
+                                     else raw_acc[path] + delta)
+                    continue
+                wire = codec.to_wire(delta)
+                mode = ("update" if (not has_init[path] or client_inited[c])
+                        else "init")
+                cst = jax.tree.map(lambda x: x[c], cstate[path])
+                ckey = codec.per_client_key(base_key, c)
+                cst2, rw, stats = enc[path](cst, shared[path], ckey, wire,
+                                            static=statics[path], mode=mode)
+                cstate[path] = jax.tree.map(
+                    lambda x, u, _c=c: x.at[_c].set(u), cstate[path], cst2)
+                stats_rows[path].append(stats)
+                wire_acc[path] = (rw if path not in wire_acc
+                                  else wire_acc[path] + rw)
+            client_inited[c] = True
+
+        reds: Dict[str, jnp.ndarray] = {}
+        recon_mean: Dict[str, jnp.ndarray] = {}
+        for path in group_paths:
+            codec = codecs.get(path)
+            if codec is None:
+                recon_mean[path] = raw_acc[path] / n_sel
+                continue
+            red = codec.reduce_stats(jnp.stack(stats_rows[path]))
+            mean_wire = wire_acc[path] / n_sel
+            shared[path] = upd_shared[path](shared[path], red, mean_wire)
+            recon_mean[path] = codec.from_wire(
+                mean_wire, flat_g[path].shape).astype(flat_g[path].dtype)
+            reds[path] = red
+
+        avg = {p: recon_mean[p] * cfg.server_lr for p in group_paths}
+
+        dl_reds: Dict[str, jnp.ndarray] = {}
+        dl_mode = "init" if (dl_has_init and rnd == 0) else "update"
+        for path in group_paths:
+            dlc = dl_codecs.get(path)
+            if dlc is None:
+                continue
+            wire = dlc.to_wire(avg[path])
+            cst2, rw, stats = dl_enc[path](dl_state[path], (), base_key, wire,
+                                           static=dl_statics[path],
+                                           mode=dl_mode)
+            dl_state[path] = cst2
+            avg[path] = dlc.from_wire(rw, avg[path].shape).astype(avg[path].dtype)
+            dl_reds[path] = dlc.reduce_stats(stats[None])
+
+        params = _set_groups(params, {p: flat_g[p] + avg[p].astype(flat_g[p].dtype)
                                       for p in group_paths})
         jax.block_until_ready(params)
+
+        # ---- the single host sync: same packed layout as the fused engine
+        acct.consume(host_fetch(pack_round_stats(reds, dl_reds)), ledger, rnd)
         round_wall.append(time.perf_counter() - t_round)
 
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
@@ -312,7 +375,7 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
 
     res.wall_s = time.time() - t0
     res.extra["engine"] = "loop"
+    res.extra["use_pallas"] = use_pallas
     res.extra["round_wall_s"] = round_wall
-    if hasattr(method, "sum_d"):
-        res.extra["sum_d"] = method.sum_d
+    res.extra.update(acct.metrics)
     return res

@@ -22,7 +22,7 @@ from .quant import block_dequant_pallas, block_quant_pallas
 
 __all__ = [
     "encode", "decode", "block_quantize", "block_dequantize",
-    "choose_block_m", "VMEM_BUDGET_BYTES",
+    "quantize_update", "choose_block_m", "VMEM_BUDGET_BYTES",
 ]
 
 # v5e VMEM is ~128 MiB/core architecturally but ~16 MiB is the practical
@@ -118,6 +118,35 @@ def block_quantize(
         gp, u, block=block, bits=bits, block_rows=br, interpret=interp
     )
     return codes, scales, pad
+
+
+def quantize_update(
+    g: jnp.ndarray, key: jax.Array, *, bits: int = 8, block: int = 512,
+    use_pallas: bool = False, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Quantize-dequantize a flat update for the FL quantization codecs
+    (FedPAQ, FedQClip) -- the same ``use_pallas`` switch the GradESTC
+    encode takes.
+
+    ``use_pallas=False``: the paper's global-max-abs stochastic quantizer
+    (one 32-bit scale per tensor; ``core.baselines.quantize_stochastic``).
+    ``use_pallas=True``: the TPU-native block-local quantizer
+    (``quant.block_quant_pallas``; one 32-bit scale per ``block`` entries,
+    interpret mode on CPU).  Returns the server-side reconstruction; byte
+    accounting for either wire format lives with the codec
+    (``core.codecs.FedPAQCodec.charge_bits``).
+    """
+    if not use_pallas:
+        from repro.core.baselines import dequantize, quantize_stochastic
+
+        codes, scale = quantize_stochastic(g, key, bits)
+        return dequantize(codes, scale, bits).astype(g.dtype)
+    codes, scales, pad = block_quantize(
+        g, key, block=block, bits=bits, use_kernel=True, interpret=interpret
+    )
+    return block_dequantize(
+        codes, scales, pad, block=block, bits=bits, out_dtype=g.dtype
+    )
 
 
 def block_dequantize(
