@@ -1,5 +1,6 @@
 """Round-engine benchmark: fused single-program round vs per-client loop,
-per *method* (the codec protocol runs every Table III method fused).
+per *method* (the codec protocol runs every Table III method fused), plus
+the device-count sweep for the sharded round (DESIGN.md Sec. 10).
 
 Measures, for each method at the configured client counts on the current
 backend:
@@ -9,9 +10,19 @@ backend:
     (which is dominated by XLA trace+compile time; mixing it into the mean
     would swamp the per-method steady-state comparison);
   * measured host syncs per round (every device->host fetch in the FL
-    runtime goes through ``core.metrics.host_fetch``; both engines now
-    contract to exactly 1 -- the packed stats vector);
+    runtime goes through ``core.metrics.host_fetch``; round accounting
+    contracts to exactly 1 -- the packed stats vector -- with eval-round
+    fetches counted separately via ``FLResult.eval_rounds``);
   * the fused-over-loop steady-state speedup.
+
+The **device sweep** additionally runs the fused engine sharded over
+1/4/8 host-platform devices (each count in its own subprocess, forcing
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax imports)
+and reports per-count round wall, speedup over 1 device, scaling
+efficiency (speedup/N), and the pipeline overlap won by the speculative
+deferred-stats host loop (``speculate`` on vs off).  ``host_cores`` is
+recorded alongside: on machines with fewer physical cores than devices the
+sweep measures oversubscribed lockstep, not real scaling.
 
 The model is deliberately tiny: the engines run *identical* math, so at
 equal compute the ratio isolates per-client dispatch overhead, which is
@@ -22,7 +33,8 @@ Emits ``BENCH_round_engine.json`` (committed at the repo root so the perf
 trajectory is tracked PR-over-PR).
 
 Usage:  PYTHONPATH=src python benchmarks/round_engine.py \
-            [--out PATH] [--clients C ...] [--methods M ...]
+            [--out PATH] [--clients C ...] [--methods M ...] \
+            [--device-sweep N ...] [--smoke]
 """
 
 from __future__ import annotations
@@ -30,8 +42,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import pathlib
+import subprocess
 import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -46,6 +61,13 @@ METHOD_CLIENTS = 50
 #: ... and GradESTC additionally sweeps the scaling curve.
 GRADESTC_CLIENTS = (10, 50, 100)
 METHODS = ("gradestc", "topk", "fedpaq", "signsgd", "fedqclip", "svdfed")
+#: the sharded-round device sweep (fused engine only).  1/4/8 are the
+#: acceptance points; 2 is included because this matters on small hosts:
+#: scaling saturates at the physical core count (``host_cores`` rides in
+#: the payload), and on a 2-core container the 2-device point is the only
+#: one measuring real parallelism rather than oversubscribed lockstep.
+DEVICE_SWEEP = (1, 2, 4, 8)
+SWEEP_METHODS = ("gradestc", "fedpaq")
 WARMUP_ROUNDS = 4          # covers init round + Formula-13 d re-bucketing compiles
 MEASURED_ROUNDS = 8
 
@@ -59,36 +81,122 @@ def bench_arch() -> ArchConfig:
     )
 
 
-def bench_cfg(method: str, engine: str, n_clients: int) -> FLConfig:
+def bench_cfg(method: str, engine: str, n_clients: int, *, devices: int = 1,
+              speculate: bool = True, rounds: int | None = None) -> FLConfig:
     return FLConfig(
-        method=method, rounds=WARMUP_ROUNDS + MEASURED_ROUNDS,
+        method=method,
+        rounds=WARMUP_ROUNDS + MEASURED_ROUNDS if rounds is None else rounds,
         n_clients=n_clients, local_steps=1, batch=1, seq=8,
         eval_every=10 ** 9, seed=0, arch=bench_arch(), engine=engine,
+        devices=devices, speculate=speculate,
     )
 
 
-def measure(method: str, engine: str, n_clients: int) -> dict:
-    cfg = bench_cfg(method, engine, n_clients)
+def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
+            speculate: bool = True, rounds: int | None = None) -> dict:
+    cfg = bench_cfg(method, engine, n_clients, devices=devices,
+                    speculate=speculate, rounds=rounds)
+    warm = min(WARMUP_ROUNDS, cfg.rounds - 1)
     metrics.reset_host_sync_count()
     res = run_fl(cfg)
     syncs = metrics.host_sync_count()
     wall = res.extra["round_wall_s"]
-    steady = float(np.median(wall[WARMUP_ROUNDS:]))
+    steady = float(np.median(wall[warm:]))
     return {
         "engine": res.extra["engine"],
         "method": method,
         "n_clients": n_clients,
+        "devices": devices,
+        "speculate": speculate,
         # steady state and trace/compile cost reported separately: round 0
         # is dominated by compilation and would otherwise skew any mean.
         "steady_round_ms": steady * 1e3,
         "first_round_ms": wall[0] * 1e3,
         "rounds_per_sec": 1.0 / steady,
-        "host_syncs_per_round": syncs / cfg.rounds,
-        "warmup_rounds": WARMUP_ROUNDS,
-        "measured_rounds": MEASURED_ROUNDS,
+        # round accounting syncs only; eval rounds fetch once each and are
+        # excluded so the contract stays "exactly 1 per round".
+        "host_syncs_per_round": (syncs - len(res.eval_rounds)) / cfg.rounds,
+        "spec_misses": res.extra.get("spec_misses", 0),
+        "warmup_rounds": warm,
+        "measured_rounds": cfg.rounds - warm,
         "total_wall_s": res.wall_s,
         "final_eval_loss": res.eval_loss[-1],
         "uplink_total_bytes": res.ledger.uplink_total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# device sweep: one subprocess per device count (XLA fixes the host device
+# count at first jax import, so each count needs a fresh process)
+# ---------------------------------------------------------------------------
+
+def run_child(devices: int, methods, clients: int, rounds: int | None,
+              out: pathlib.Path) -> dict:
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={devices}".strip())
+    cmd = [sys.executable, str(pathlib.Path(__file__).resolve()), "--child",
+           "--devices", str(devices), "--clients", str(clients),
+           "--methods", *methods, "--out", str(out)]
+    if rounds is not None:
+        cmd += ["--rounds", str(rounds)]
+    subprocess.run(cmd, check=True, env=env)
+    return json.loads(out.read_text())
+
+
+def child_main(args) -> int:
+    clients = args.clients[0] if args.clients else METHOD_CLIENTS
+    results = []
+    for method in args.methods:
+        for speculate in (True, False):
+            results.append(measure(method, "fused", clients,
+                                   devices=args.devices, speculate=speculate,
+                                   rounds=args.rounds))
+    pathlib.Path(args.out).write_text(json.dumps(results))
+    return 0
+
+
+def device_sweep(sweep, methods, clients: int, rounds: int | None) -> dict:
+    if jax.default_backend() != "cpu":
+        print("device sweep: skipping (forced host devices are CPU-only)")
+        return {}
+    rows = []
+    for n in sweep:
+        with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+            rows += run_child(n, methods, clients, rounds,
+                              pathlib.Path(tmp.name))
+        for r in rows[-2 * len(methods):]:
+            tag = "spec" if r["speculate"] else "nospec"
+            print(f"  sweep {r['method']:10s} devices={n} [{tag:6s}] "
+                  f"{r['steady_round_ms']:7.1f} ms/round "
+                  f"({r['host_syncs_per_round']:.1f} syncs, "
+                  f"{r['spec_misses']} misses)")
+    base = {(r["method"]): r["steady_round_ms"] for r in rows
+            if r["devices"] == sweep[0] and r["speculate"]}
+    speedup, efficiency, overlap = {}, {}, {}
+    for r in rows:
+        m, n = r["method"], r["devices"]
+        if r["speculate"]:
+            sp = base[m] / r["steady_round_ms"]
+            speedup.setdefault(m, {})[str(n)] = sp
+            efficiency.setdefault(m, {})[str(n)] = sp / (n / sweep[0])
+        else:
+            on = next(x for x in rows if x["method"] == m
+                      and x["devices"] == n and x["speculate"])
+            overlap.setdefault(m, {})[str(n)] = (
+                r["steady_round_ms"] / on["steady_round_ms"])
+    return {
+        "clients": clients,
+        "methods": list(methods),
+        "device_counts": list(sweep),
+        "host_cores": os.cpu_count(),
+        "results": rows,
+        "speedup_vs_first": speedup,
+        "scaling_efficiency": efficiency,
+        # >1 means the speculative deferred-stats pipeline beats the
+        # blocking (speculate=False) host loop at that device count.
+        "pipeline_overlap": overlap,
     }
 
 
@@ -99,31 +207,61 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, nargs="*", default=None,
                     help="override client counts (applied to every method)")
     ap.add_argument("--methods", nargs="*", default=list(METHODS))
+    ap.add_argument("--device-sweep", type=int, nargs="*",
+                    default=list(DEVICE_SWEEP),
+                    help="device counts for the sharded sweep ([] disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 1 method, 5 rounds, devices 1+2, "
+                    "no loop-engine grid")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=1, help=argparse.SUPPRESS)
+    ap.add_argument("--rounds", type=int, default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
-    grid = []
-    for method in args.methods:
-        counts = (args.clients if args.clients
-                  else GRADESTC_CLIENTS if method == "gradestc"
-                  else (METHOD_CLIENTS,))
-        grid += [(method, C) for C in counts]
+    if args.child:
+        return child_main(args)
+
+    sweep_rounds = None
+    sweep = args.device_sweep
+    # the sweep honors --methods: sweep only the requested subset of the
+    # sweep-able methods, and skip it entirely if none was requested
+    sweep_methods = [m for m in args.methods if m in SWEEP_METHODS]
+    if not sweep_methods:
+        sweep = []
+    sweep_clients = (args.clients[0] if args.clients else METHOD_CLIENTS)
+    if args.smoke:
+        args.methods = ["gradestc"]
+        sweep_methods = ["gradestc"]
+        sweep = [1, 2]
+        sweep_rounds = 5
+        sweep_clients = 8
 
     results = []
     speedups: dict = {}
-    for method, C in grid:
-        loop = measure(method, "loop", C)
-        fused = measure(method, "fused", C)
-        results += [loop, fused]
-        sp = loop["steady_round_ms"] / fused["steady_round_ms"]
-        speedups.setdefault(method, {})[str(C)] = sp
-        print(f"{method:10s} n_clients={C:4d}  "
-              f"loop {loop['steady_round_ms']:8.1f} ms/round "
-              f"({loop['host_syncs_per_round']:.1f} syncs)   "
-              f"fused {fused['steady_round_ms']:8.1f} ms/round "
-              f"({fused['host_syncs_per_round']:.1f} syncs)   "
-              f"speedup {sp:.2f}x   "
-              f"[first round: loop {loop['first_round_ms']:.0f} ms, "
-              f"fused {fused['first_round_ms']:.0f} ms]")
+    if not args.smoke:
+        grid = []
+        for method in args.methods:
+            counts = (args.clients if args.clients
+                      else GRADESTC_CLIENTS if method == "gradestc"
+                      else (METHOD_CLIENTS,))
+            grid += [(method, C) for C in counts]
+        for method, C in grid:
+            loop = measure(method, "loop", C)
+            fused = measure(method, "fused", C)
+            results += [loop, fused]
+            sp = loop["steady_round_ms"] / fused["steady_round_ms"]
+            speedups.setdefault(method, {})[str(C)] = sp
+            print(f"{method:10s} n_clients={C:4d}  "
+                  f"loop {loop['steady_round_ms']:8.1f} ms/round "
+                  f"({loop['host_syncs_per_round']:.1f} syncs)   "
+                  f"fused {fused['steady_round_ms']:8.1f} ms/round "
+                  f"({fused['host_syncs_per_round']:.1f} syncs)   "
+                  f"speedup {sp:.2f}x   "
+                  f"[first round: loop {loop['first_round_ms']:.0f} ms, "
+                  f"fused {fused['first_round_ms']:.0f} ms]")
+
+    sweep_payload = (device_sweep(sweep, sweep_methods, sweep_clients,
+                                  sweep_rounds) if sweep else {})
 
     payload = {
         "benchmark": "round_engine",
@@ -134,6 +272,7 @@ def main(argv=None) -> int:
                    "methods": args.methods},
         "results": results,
         "speedup_fused_over_loop": speedups,
+        "device_sweep": sweep_payload,
     }
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.out}")

@@ -43,6 +43,7 @@ basis keys from :func:`client_layer_keys`.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -106,6 +107,13 @@ class Codec:
     #: (the engine tracks host-side which clients are initialized and
     #: specializes the round's ``mode`` to keep steady rounds cond-free)
     has_init_branch: bool = False
+    #: True when ``next_static`` can actually move the static config between
+    #: rounds (GradESTC's Formula 13 d re-bucketing).  The pipelined engine
+    #: speculates across the deferred stats fetch only for dynamic-static
+    #: codecs; static-free codecs always speculate for free -- and the
+    #: engine keeps the round's inputs un-donated exactly when a
+    #: speculation miss could force a redispatch.
+    dynamic_static: bool = False
 
     def __init__(self, path_idx: int = 0):
         self.path_idx = path_idx
@@ -392,6 +400,10 @@ class GradESTCCodec(_MatrixCodec):
     def has_init_branch(self) -> bool:           # "all" re-inits every round
         return self.variant != "all"
 
+    @property
+    def dynamic_static(self) -> bool:            # Formula 13 moves d buckets
+        return self.variant == "full"
+
     def init_client_state(self, n_clients: int, client_ids=None):
         plan = self.plan
         L, l, k = plan.stack, plan.l, plan.k
@@ -405,10 +417,15 @@ class GradESTCCodec(_MatrixCodec):
 
     def _layer_step(self, d: int, mode: str):
         k = self.plan.k
+        # Decode (Ghat = M A) takes the same use_pallas switch as encode:
+        # server-side reconstruction and the downlink decode path both run
+        # through the blocked Pallas decode kernel (interpret off-TPU).
+        recon = functools.partial(ge.reconstruct, use_pallas=self.use_pallas,
+                                  pallas_interpret=self.pallas_interpret)
 
         def _init(st, G):
             st2, payload, stats = ge.compress_init(st, G, k=k)
-            return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
+            return (st2.M, st2.key, recon(st2.M, payload.coeffs),
                     stats.d_r, jnp.ones((), jnp.bool_))
 
         def _update(st, G):
@@ -416,13 +433,13 @@ class GradESTCCodec(_MatrixCodec):
                 st, G, k=k, d=d, use_pallas=self.use_pallas,
                 pallas_interpret=self.pallas_interpret,
             )
-            return (st2.M, st2.key, ge.reconstruct(st2.M, payload.coeffs),
+            return (st2.M, st2.key, recon(st2.M, payload.coeffs),
                     stats.d_r, jnp.zeros((), jnp.bool_))
 
         def _project(st, G):
             # GradESTC-first ablation: frozen basis, coefficients only.
             A = st.M.T @ G
-            return (st.M, st.key, st.M @ A,
+            return (st.M, st.key, recon(st.M, A),
                     jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_))
 
         steady = _project if self.variant == "first" else _update
@@ -504,6 +521,10 @@ class EFCodec(Codec):
     @property
     def has_init_branch(self) -> bool:
         return self.inner.has_init_branch
+
+    @property
+    def dynamic_static(self) -> bool:
+        return self.inner.dynamic_static
 
     def init_client_state(self, n_clients: int, client_ids=None):
         return (self.inner.init_client_state(n_clients, client_ids),

@@ -238,9 +238,14 @@ def compress(
 
 
 def decompress(
-    state: DecompressorState, payload: Payload, init_basis: jnp.ndarray | None = None
+    state: DecompressorState, payload: Payload, init_basis: jnp.ndarray | None = None,
+    *, use_pallas: bool = False, pallas_interpret: bool | None = None,
 ) -> Tuple[DecompressorState, jnp.ndarray]:
-    """Server side (Alg. 2): update the mirrored basis, reconstruct G-hat."""
+    """Server side (Alg. 2): update the mirrored basis, reconstruct G-hat.
+
+    ``use_pallas`` routes the reconstruction GEMM through the decode kernel
+    (``kernels/gradestc_decode.py``) -- the same static switch the encode
+    path takes, interpret fallback off-TPU."""
     M = state.M
     k = M.shape[1]
     d = payload.new_vectors.shape[0]
@@ -252,7 +257,8 @@ def decompress(
     )
     if init_basis is not None:
         M_upd = jnp.where(payload.init, init_basis, M_upd)
-    Ghat = M_upd @ payload.coeffs
+    Ghat = reconstruct(M_upd, payload.coeffs, use_pallas=use_pallas,
+                       pallas_interpret=pallas_interpret)
     return DecompressorState(M=M_upd), Ghat
 
 
@@ -261,7 +267,19 @@ def apply_payload(state: DecompressorState, payload: Payload) -> DecompressorSta
     return new_state
 
 
-def reconstruct(M: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+def reconstruct(
+    M: jnp.ndarray, A: jnp.ndarray, *, use_pallas: bool = False,
+    pallas_interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Ghat = M A (Alg. 2 line 2) -- the decode half of the codec.
+
+    ``use_pallas`` dispatches to the blocked Pallas decode kernel via
+    ``kernels.ops.decode`` (compiled on TPU, interpret mode elsewhere); the
+    default stays the plain XLA GEMM."""
+    if use_pallas:
+        from repro.kernels.ops import decode
+
+        return decode(M, A, interpret=pallas_interpret)
     return M @ A
 
 

@@ -66,10 +66,21 @@ class CommLedger:
     def begin_round(self) -> None:
         self.per_round_uplink.append(0.0)
 
-    def charge_uplink(self, scalars: float, group: str = "_") -> None:
+    def charge_uplink(self, scalars: float, group: str = "_",
+                      round_idx: int | None = None) -> None:
+        """Charge ``scalars`` of uplink.  ``round_idx`` pins the charge to an
+        explicit round slot -- required by the pipelined fused engine, which
+        defers the stats fetch for round r until after round r+1 has begun
+        (so "the last slot" is no longer round r's slot)."""
         b = float(scalars) * self.bytes_per_scalar
         self.uplink_total += b
-        if self.per_round_uplink:
+        if round_idx is not None:
+            if not 0 <= round_idx < len(self.per_round_uplink):
+                raise IndexError(
+                    f"charge_uplink round_idx={round_idx} but only "
+                    f"{len(self.per_round_uplink)} rounds begun")
+            self.per_round_uplink[round_idx] += b
+        elif self.per_round_uplink:
             self.per_round_uplink[-1] += b
         self.per_group[group] = self.per_group.get(group, 0.0) + b
 

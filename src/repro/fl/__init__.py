@@ -7,7 +7,8 @@
                    (entry point; dispatches between the two engines)
   * engine      -- fused client-parallel round, generic over any codec:
                    one jitted XLA program per round (uplink + downlink),
-                   one host sync (DESIGN.md Sec. 8)
+                   one host sync; optionally sharded over a device mesh
+                   with a pipelined host loop (DESIGN.md Secs. 8 + 10)
 
 The production SPMD round step (clients = mesh data-axis groups, compressed
 all-gather aggregation) lives in ``repro.launch``.

@@ -281,6 +281,15 @@ class RoundAccountant:
         return (tuple(sorted(self.statics.items())),
                 tuple(sorted(self.dl_statics.items())))
 
+    @property
+    def has_dynamic_statics(self) -> bool:
+        """True when ``next_static`` can move any codec's static config
+        between rounds (GradESTC's Formula 13 d buckets).  The pipelined
+        fused engine dispatches round r+1 before consuming round r's stats;
+        only dynamic-static codecs can make that speculation miss."""
+        return any(c.dynamic_static for c in self.codecs.values()) or any(
+            c.dynamic_static for c in self.dl_codecs.values())
+
     def consume(self, packed: np.ndarray, ledger, rnd: int) -> None:
         """Charge the ledger from the fetched stats and advance statics."""
         packed = np.asarray(packed).reshape(-1)
@@ -300,7 +309,10 @@ class RoundAccountant:
             for k, v in codec.host_metrics(red, self.n_sel, st).items():
                 self.metrics[k] = self.metrics.get(k, 0) + v
             self.statics[path] = codec.next_static(red, st)
-        ledger.charge_uplink(bits / 32.0, group=f"round{rnd}")
+        # round_idx pins the charge to round ``rnd``'s ledger slot: the
+        # pipelined engine has usually already begun round rnd+1 by the time
+        # round rnd's stats arrive.
+        ledger.charge_uplink(bits / 32.0, group=f"round{rnd}", round_idx=rnd)
 
         if self.downlink_enabled:
             dbits = 32 * self.dl_raw_scalars

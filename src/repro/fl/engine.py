@@ -1,4 +1,4 @@
-"""Fused client-parallel FL round engine (DESIGN.md Sec. 8).
+"""Fused client-parallel FL round engine (DESIGN.md Secs. 8 and 10).
 
 One FL round == one jitted XLA program, for **every** uplink method:
 
@@ -19,25 +19,49 @@ One FL round == one jitted XLA program, for **every** uplink method:
     with the reference loop -- turns into exact integer-bit ledger charges
     and the next round's static codec config (Formula 13).
 
-Static per-round config (GradESTC's rSVD candidate count ``d``) travels as
-hashable ``(path, static)`` tuples, so the engine retraces only when
-Formula 13 actually moves a group to a new power-of-two bucket -- the same
-bounded-recompilation contract as the reference loop.
+Scaling across a device mesh (``FLConfig.devices > 1``): the same round
+runs under ``shard_map`` on a ``("data", "model")`` mesh
+(``launch/mesh.make_fl_mesh``), with the *selected-client* axis -- the
+vmapped local training, the per-client wire/stats, the gathered slice of
+the stacked codec state -- sharded over ``"data"`` and the model params,
+codec shared state, and persistent per-client state store replicated.
+Cross-shard traffic is exactly: one all-gather of the tiny per-client stats
+rows and the updated selected-client codec state, plus one psum of the
+masked reconstruction sums -- so the packed stats vector and the single
+host sync survive sharding unchanged, and ledger bytes are *identical* to
+the single-device program (axis placement comes from
+``launch/sharding.FLRoundSpecs``; client counts that do not divide the mesh
+are padded with a mirrored client and masked out).
+
+Pipelining the host loop: batch blocks are assembled on a background
+double-buffered prefetch thread and ``device_put`` under the batch
+sharding; ``params``/``cstate``/``dl_state`` are donated into the round
+program; and the packed-stats fetch for round r is deferred one round --
+round r+1 dispatches with the current static map and is redispatched only
+when Formula 13 actually moves a group to a new power-of-two d bucket
+(``FLResult.extra["spec_misses"]``).  Donation and speculative redispatch
+conflict by construction (a donated input cannot be replayed), so the
+engine donates exactly when no codec has dynamic statics or speculation is
+off -- see DESIGN.md Sec. 10.
 
 The per-client Python loop (``simulation._run_fl_loop``) stays as the parity
-oracle; ``tests/test_round_engine.py`` pins the two engines to each other
-for all seven methods.
+oracle; ``tests/test_round_engine.py`` and ``tests/test_sharded_engine.py``
+pin every engine configuration to it.
 """
 
 from __future__ import annotations
 
 import functools
+import queue
+import threading
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.codecs import SERVER_CLIENT_ID
 from repro.core.metrics import host_fetch
@@ -61,24 +85,30 @@ from .simulation import (
 __all__ = ["run_fl_fused"]
 
 
+# ---------------------------------------------------------------------------
+# round program builders
+# ---------------------------------------------------------------------------
+
 def _build_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
-                 group_paths):
-    """Returns a jitted ``round_fn`` generic over the codec dicts.
+                 group_paths, donate: bool = False):
+    """Returns a jitted single-device ``round_fn`` generic over the codecs.
 
     ``static_map`` / ``dl_static_map`` are hashable ``(path, static)``
     tuples -- the only static inputs that change across rounds (bucketed
     powers of two for GradESTC's ``d``; ``None`` for static-free codecs).
     ``mode`` / ``dl_mode`` statically select the init/update branch
     structure for codecs with an init branch (see ``GradESTCCodec``).
+    ``donate`` aliases the params / client-state / downlink-state buffers
+    into their round-r+1 successors.
     """
     local_train = make_local_train(arch, lr)
 
     @functools.partial(jax.jit, static_argnames=(
-        "static_map", "dl_static_map", "mode", "dl_mode", "full_part"))
+        "static_map", "dl_static_map", "mode", "dl_mode", "full_part"),
+        donate_argnums=(0, 1, 3) if donate else ())
     def round_fn(params, cstate, shared, dl_state, batches, sel, base_key,
                  static_map, dl_static_map, mode, dl_mode, full_part):
         static_of = dict(static_map)
-        dl_static_of = dict(dl_static_map)
 
         def take(x):
             return x if full_part else x[sel]
@@ -91,7 +121,6 @@ def _build_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
         flat_l = _flatten_groups(locals_, group_paths)
 
         new_cstate, new_shared = dict(cstate), dict(shared)
-        new_dl_state = dict(dl_state)
         recon_mean: Dict[str, jnp.ndarray] = {}
         reds: Dict[str, jnp.ndarray] = {}
         for path in group_paths:
@@ -120,26 +149,8 @@ def _build_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
             reds[path] = red
 
         avg = {p: recon_mean[p] * server_lr for p in group_paths}
-
-        # Optional downlink codec: the server compresses the aggregated
-        # update once; every client mirrors the shared decompressor, so the
-        # server applies the *reconstruction* to stay bit-identical with
-        # clients -- all in-jit, its stats ride the same packed transfer.
-        dl_reds: Dict[str, jnp.ndarray] = {}
-        for path in group_paths:
-            dlc = dl_codecs.get(path)
-            if dlc is None:
-                continue
-            wire = dlc.to_wire(avg[path])
-            cst2, recon_w, stats = dlc.encode(
-                dl_state[path], (), base_key, wire,
-                static=dl_static_of.get(path), mode=dl_mode,
-            )
-            new_dl_state[path] = cst2
-            avg[path] = dlc.from_wire(
-                recon_w, avg[path].shape).astype(avg[path].dtype)
-            dl_reds[path] = dlc.reduce_stats(stats[None])
-
+        new_dl_state, dl_reds = _apply_downlink(
+            dl_codecs, dl_state, avg, base_key, dict(dl_static_map), dl_mode)
         new_flat = {p: flat_g[p] + avg[p].astype(flat_g[p].dtype)
                     for p in group_paths}
         new_params = _set_groups(params, new_flat)
@@ -149,17 +160,347 @@ def _build_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
     return round_fn
 
 
+def _apply_downlink(dl_codecs, dl_state, avg, base_key, dl_static_of, dl_mode):
+    """Optional downlink codec: the server compresses the aggregated update
+    once; every client mirrors the shared decompressor, so the server
+    applies the *reconstruction* to stay bit-identical with clients -- all
+    in-jit, its stats ride the same packed transfer.  ``avg`` is mutated in
+    place.  Shared by the single-device and sharded programs (under
+    ``shard_map`` it runs replicated: every shard computes the identical
+    server-side encode from the psum'd mean)."""
+    new_dl_state = dict(dl_state)
+    dl_reds: Dict[str, jnp.ndarray] = {}
+    for path, dlc in dl_codecs.items():
+        wire = dlc.to_wire(avg[path])
+        cst2, recon_w, stats = dlc.encode(
+            dl_state[path], (), base_key, wire,
+            static=dl_static_of.get(path), mode=dl_mode,
+        )
+        new_dl_state[path] = cst2
+        avg[path] = dlc.from_wire(
+            recon_w, avg[path].shape).astype(avg[path].dtype)
+        dl_reds[path] = dlc.reduce_stats(stats[None])
+    return new_dl_state, dl_reds
+
+
+def _as_i32(leaf: jnp.ndarray) -> jnp.ndarray:
+    """Lossless (C_loc, -1) int32 view of a codec-state leaf, so every
+    per-client state update rides *one* fused all-gather regardless of
+    dtype mix (f32 bases, uint32 key stacks, bool init flags)."""
+    if leaf.dtype == jnp.bool_:
+        flat = leaf.astype(jnp.int32)
+    else:
+        assert leaf.dtype.itemsize == 4, leaf.dtype
+        flat = jax.lax.bitcast_convert_type(leaf, jnp.int32)
+    return flat.reshape(flat.shape[0], -1)
+
+
+def _from_i32(col: jnp.ndarray, dtype, shape) -> jnp.ndarray:
+    if jnp.dtype(dtype) == jnp.bool_:
+        return (col != 0).reshape(shape)
+    return jax.lax.bitcast_convert_type(
+        col.reshape(shape).astype(jnp.int32), jnp.dtype(dtype))
+
+
+def _build_sharded_round(arch, lr: float, server_lr: float, codecs, dl_codecs,
+                         group_paths, rspecs, n_sel: int,
+                         donate: bool = False):
+    """The same round as ``_build_round``, under ``shard_map``.
+
+    Per shard: a slice of the padded selected-client axis -- its batch
+    block, client ids, and padding mask (``launch/sharding.FLRoundSpecs``
+    owns the placement).  Params and all codec state enter replicated
+    (``P()``); each shard gathers its selected rows from the replicated
+    store locally.  Cross-shard traffic is exactly **two collectives per
+    round** (on an oversubscribed CPU mesh every collective is a lockstep
+    barrier, so per-group/per-leaf collectives dominated the round until
+    they were fused):
+
+      * one ``psum`` of the concatenated mask-weighted reconstruction sums
+        (compressed groups' recon wire + raw groups' dense deltas, all f32);
+      * one ``all_gather`` of the concatenated per-client int32 row
+        [client id | per-group stats | bitcast codec-state update], sliced
+        back to the real (unpadded) clients so ``reduce_stats`` sees
+        *exactly* the rows the single-device program reduces -- packed
+        stats, and therefore ledger bytes, are identical by construction.
+        The gathered state columns scatter into the replicated store
+        (padded rows mirror client ``sel[0]`` and scatter its identical
+        update, so duplicates are benign).
+
+    Everything after the collectives (shared-state update, downlink codec,
+    server step) is computed redundantly-replicated on every shard, keeping
+    all outputs ``P()``.
+    """
+    local_train = make_local_train(arch, lr)
+    mesh = rspecs.mesh
+    ax = rspecs.client_axis_name
+
+    def core(static_of, dl_static_of, mode, dl_mode,
+             params, cstate, shared, dl_state, batches, sel, mask, base_key):
+        def cmask(x):          # (C_loc,) mask broadcast against x's rank
+            return mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+
+        locals_ = jax.vmap(local_train, in_axes=(None, 0))(params, batches)
+        flat_g = _flatten_groups(params, group_paths)
+        flat_l = _flatten_groups(locals_, group_paths)
+
+        # ---- per-shard phase: encode local clients, stage collective rows
+        sums = {}                       # path -> local masked sum (wire/raw)
+        int_cols = [sel[:, None].astype(jnp.int32)]
+        state_cols: Dict[str, list] = {}
+        state_meta: Dict[str, tuple] = {}
+        stats_of: Dict[str, jnp.ndarray] = {}
+        for path in group_paths:
+            delta = flat_l[path] - flat_g[path][None]          # (C_loc, ...)
+            codec = codecs.get(path)
+            if codec is None:
+                sums[path] = jnp.sum(delta * cmask(delta), 0)
+                continue
+            wire = jax.vmap(codec.to_wire)(delta)
+            ckeys = jax.vmap(
+                lambda c, _co=codec: _co.per_client_key(base_key, c)
+            )(sel)
+            enc = functools.partial(codec.encode,
+                                    static=static_of.get(path), mode=mode)
+            cst = jax.tree.map(lambda x: x[sel], cstate[path])
+            cst2, recon, stats = jax.vmap(enc, in_axes=(0, None, 0, 0))(
+                cst, shared[path], ckeys, wire
+            )
+            sums[path] = jnp.sum(recon * cmask(recon), 0)
+            int_cols.append(stats)
+            leaves, treedef = jax.tree.flatten(cst2)
+            state_cols[path] = [_as_i32(lf) for lf in leaves]
+            state_meta[path] = (treedef, [lf.shape for lf in leaves],
+                                [lf.dtype for lf in leaves])
+
+        # ---- collective 1: fused psum of every group's masked sum --------
+        flat_sums = jnp.concatenate(
+            [sums[p].reshape(-1).astype(jnp.float32) for p in group_paths])
+        flat_sums = jax.lax.psum(flat_sums, ax)
+        mean_of: Dict[str, jnp.ndarray] = {}
+        off = 0
+        for path in group_paths:
+            size = int(np.prod(sums[path].shape))
+            mean_of[path] = (flat_sums[off: off + size]
+                             .reshape(sums[path].shape) / n_sel)
+            off += size
+
+        # ---- collective 2: fused all-gather of [sel | stats | state] -----
+        for path in state_cols:
+            int_cols.extend(state_cols[path])
+        gathered = jax.lax.all_gather(
+            jnp.concatenate(int_cols, axis=1), ax, axis=0, tiled=True)
+        sel_all = gathered[:, 0]
+        off = 1
+        for path in group_paths:
+            codec = codecs.get(path)
+            if codec is None:
+                continue
+            stats_of[path] = gathered[:n_sel, off: off + codec.client_stats_len]
+            off += codec.client_stats_len
+        new_cstate = dict(cstate)
+        for path, (treedef, shapes, dtypes) in state_meta.items():
+            upd = []
+            for shape, dtype in zip(shapes, dtypes):
+                size = int(np.prod(shape[1:], dtype=np.int64))
+                col = gathered[:, off: off + size]
+                upd.append(_from_i32(col, dtype,
+                                     (gathered.shape[0],) + shape[1:]))
+                off += size
+            new_cstate[path] = jax.tree.map(
+                lambda x, u: x.at[sel_all].set(u),
+                cstate[path], jax.tree.unflatten(treedef, upd))
+
+        # ---- replicated phase: identical on every shard ------------------
+        new_shared = dict(shared)
+        recon_mean: Dict[str, jnp.ndarray] = {}
+        reds: Dict[str, jnp.ndarray] = {}
+        for path in group_paths:
+            codec = codecs.get(path)
+            if codec is None:
+                recon_mean[path] = mean_of[path]
+                continue
+            red = codec.reduce_stats(stats_of[path])
+            new_shared[path] = codec.update_shared(shared[path], red,
+                                                   mean_of[path])
+            recon_mean[path] = codec.from_wire(
+                mean_of[path], flat_g[path].shape).astype(flat_g[path].dtype)
+            reds[path] = red
+
+        avg = {p: recon_mean[p] * server_lr for p in group_paths}
+        new_dl_state, dl_reds = _apply_downlink(
+            dl_codecs, dl_state, avg, base_key, dl_static_of, dl_mode)
+        new_flat = {p: flat_g[p] + avg[p].astype(flat_g[p].dtype)
+                    for p in group_paths}
+        new_params = _set_groups(params, new_flat)
+        packed = pack_round_stats(reds, dl_reds)
+        return new_params, new_cstate, new_shared, new_dl_state, packed
+
+    @functools.partial(jax.jit, static_argnames=(
+        "static_map", "dl_static_map", "mode", "dl_mode"),
+        donate_argnums=(0, 1, 3) if donate else ())
+    def round_fn(params, cstate, shared, dl_state, batches, sel, mask,
+                 base_key, static_map, dl_static_map, mode, dl_mode):
+        fn = functools.partial(core, dict(static_map), dict(dl_static_map),
+                               mode, dl_mode)
+        smapped = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), rspecs.batch(batches),
+                      rspecs.client_vec, rspecs.client_vec, P()),
+            out_specs=(P(), P(), P(), P(), P()),
+            check_rep=False,
+        )
+        return smapped(params, cstate, shared, dl_state, batches, sel, mask,
+                       base_key)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# host-side round prefetcher
+# ---------------------------------------------------------------------------
+
+class _RoundItem(NamedTuple):
+    sel: np.ndarray                       # (n_sel,) selected client ids
+    mode: str                             # "init" | "update" | "mixed"
+    batches: Dict[str, jnp.ndarray]       # (C_pad, steps, B, S) on device
+    sel_dev: jnp.ndarray                  # (C_pad,) int32 on device
+    mask_dev: Optional[jnp.ndarray]       # (C_pad,) f32 (sharded runs only)
+
+
+class _RoundPrefetcher:
+    """Assembles each round's batch block off the critical path.
+
+    Owns the *entire* host side of round construction so it is bit-identical
+    to the reference loop: the selection rng, the per-client stream draws
+    (same order: per round, per selected client, ``local_steps`` nexts), and
+    the host mirror of which clients hold an initialized compressor (a
+    client inits on first selection -- deterministic, so the mode of a
+    future round is known at prefetch time).  With ``threaded=True`` a
+    daemon worker keeps a double buffer (queue depth 2) of device-resident
+    rounds, ``jax.device_put`` under the batch sharding.
+    """
+
+    def __init__(self, cfg: FLConfig, streams, rng, n_sel: int,
+                 has_init: bool, place: Callable, threaded: bool):
+        self.cfg = cfg
+        self.streams = streams
+        self.rng = rng
+        self.n_sel = n_sel
+        self.has_init = has_init
+        self.place = place
+        self.client_inited = np.zeros(cfg.n_clients, bool)
+        self._q: Optional[queue.Queue] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if threaded:
+            self._q = queue.Queue(maxsize=2)
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _assemble(self) -> _RoundItem:
+        cfg = self.cfg
+        sel = np.asarray(
+            sorted(self.rng.choice(cfg.n_clients, size=self.n_sel,
+                                   replace=False)), np.int32)
+        per_client = []
+        for c in sel:
+            bs = [next(self.streams[int(c)]) for _ in range(cfg.local_steps)]
+            per_client.append({kk: np.stack([np.asarray(b[kk]) for b in bs])
+                               for kk in bs[0]})
+        block = {kk: np.stack([pc[kk] for pc in per_client])
+                 for kk in per_client[0]}
+        if self.has_init:
+            sel_inited = self.client_inited[sel]
+            mode = ("update" if sel_inited.all()
+                    else "init" if not sel_inited.any() else "mixed")
+            self.client_inited[sel] = True
+        else:
+            mode = "update"
+        batches, sel_dev, mask_dev = self.place(block, sel)
+        return _RoundItem(sel, mode, batches, sel_dev, mask_dev)
+
+    def _put(self, item) -> bool:
+        """Stop-aware put, so an abandoned driver cannot strand the worker
+        blocked on a full queue (holding device-resident batch blocks)."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.2)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self) -> None:
+        try:
+            for _ in range(self.cfg.rounds):
+                if not self._put(self._assemble()):
+                    return
+        except BaseException as e:          # surfaced on the next get()
+            self._put(e)
+
+    def get(self) -> _RoundItem:
+        if self._q is None:
+            return self._assemble()
+        item = self._q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+    def close(self) -> None:
+        """Release the worker and any buffered device blocks (idempotent;
+        a no-op on the clean path where all rounds were consumed)."""
+        if self._q is None:
+            return
+        self._stop.set()
+        for _ in range(2):
+            while True:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            if self._thread is not None:
+                self._thread.join(timeout=1.0)
+
+
+def _single_device_place(block, sel):
+    return ({k: jnp.asarray(v) for k, v in block.items()},
+            jnp.asarray(sel), None)
+
+
+def _sharded_place(rspecs, block, sel):
+    """Pad the selected axis to the shard count (mirroring client ``sel[0]``
+    so padded lanes compute a benign duplicate) and place every per-client
+    array under its ``FLRoundSpecs`` sharding."""
+    c_sel = int(sel.shape[0])
+    c_pad = rspecs.pad_clients(c_sel)
+    mask = np.zeros((c_pad,), np.float32)
+    mask[:c_sel] = 1.0
+    if c_pad > c_sel:
+        reps = c_pad - c_sel
+        block = {k: np.concatenate([v, np.repeat(v[:1], reps, axis=0)])
+                 for k, v in block.items()}
+        sel = np.concatenate([sel, np.repeat(sel[:1], reps)])
+    return (rspecs.put_batch(block), rspecs.put_client_vec(sel),
+            rspecs.put_client_vec(mask))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
 def run_fl_fused(cfg: FLConfig,
                  progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
     t0 = time.time()
     su = _setup_run(cfg)
     arch, params, policy = su.arch, su.params, su.policy
-    streams, eval_batches, eval_step = su.streams, su.eval_batches, su.eval_step
+    eval_fn, eval_block = su.eval_fn, su.eval_block
     ledger, rng, group_paths, n_sel = su.ledger, su.rng, su.group_paths, su.n_sel
 
     use_pallas = (jax.default_backend() == "tpu"
                   if cfg.use_pallas is None else cfg.use_pallas)
     C = cfg.n_clients
+    ndev = int(cfg.devices or 1)
 
     codecs = build_codecs(su.method, policy, group_paths, use_pallas, None)
     dl_codecs = (build_downlink_codecs(policy, group_paths, cfg.seed,
@@ -167,6 +508,12 @@ def run_fl_fused(cfg: FLConfig,
                  if cfg.downlink_compress else {})
     acct = RoundAccountant(codecs, dl_codecs, policy, group_paths, n_sel,
                            downlink_enabled=cfg.downlink_compress)
+    # A donated input cannot be replayed, and a speculation miss replays the
+    # round with corrected statics -- so donate exactly when a miss is
+    # impossible (no dynamic statics) or speculation is off (DESIGN.md
+    # Sec. 10, "donation vs speculation").
+    speculate = bool(cfg.speculate)
+    donate = not (speculate and acct.has_dynamic_statics)
 
     cstate = {p: c.init_client_state(C) for p, c in codecs.items()}
     shared = {p: c.init_shared_state() for p, c in codecs.items()}
@@ -176,63 +523,105 @@ def run_fl_fused(cfg: FLConfig,
         for p, c in dl_codecs.items()
     }
 
-    round_fn = _build_round(arch, cfg.lr, cfg.server_lr, codecs, dl_codecs,
-                            group_paths)
+    if ndev > 1:
+        from repro.launch.mesh import make_fl_mesh
+        from repro.launch.sharding import FLRoundSpecs, make_plan
+
+        mesh = make_fl_mesh(ndev)
+        rspecs = FLRoundSpecs(make_plan(mesh, arch))
+        # Commit everything replicated up front so donated buffers alias
+        # across rounds instead of being re-laid-out on first use.
+        params = rspecs.put_replicated(params)
+        cstate = rspecs.put_replicated(cstate)
+        shared = rspecs.put_replicated(shared)
+        dl_state = rspecs.put_replicated(dl_state)
+        round_fn = _build_sharded_round(arch, cfg.lr, cfg.server_lr, codecs,
+                                        dl_codecs, group_paths, rspecs,
+                                        n_sel, donate)
+        place = functools.partial(_sharded_place, rspecs)
+    else:
+        round_fn = _build_round(arch, cfg.lr, cfg.server_lr, codecs,
+                                dl_codecs, group_paths, donate)
+        place = _single_device_place
+
+    has_init = any(c.has_init_branch for c in codecs.values())
+    dl_has_init = any(c.has_init_branch for c in dl_codecs.values())
+    prefetcher = _RoundPrefetcher(cfg, su.streams, rng, n_sel, has_init,
+                                  place, threaded=bool(cfg.prefetch))
 
     res = FLResult([], [], [], [], ledger, 0.0)
     round_wall = []
-    # Host mirror of which clients hold an initialized compressor (a client
-    # inits on first selection) -- lets the common rounds compile cond-free.
-    has_init = any(c.has_init_branch for c in codecs.values())
-    dl_has_init = any(c.has_init_branch for c in dl_codecs.values())
-    client_inited = np.zeros(C, bool)
+    spec_misses = 0
+    pending = None          # (packed stats device array, round index)
 
-    for rnd in range(cfg.rounds):
-        t_round = time.perf_counter()
-        ledger.begin_round()
-        sel = sorted(rng.choice(C, size=n_sel, replace=False))
-        # Assemble the round's (C_sel, steps, B, S) batch block on the host
-        # and ship it in one transfer -- not one jnp.stack dispatch per
-        # client (the streams yield CPU-backed arrays; np.asarray is cheap).
-        per_client = []
-        for c in sel:
-            bs = [next(streams[c]) for _ in range(cfg.local_steps)]
-            per_client.append({kk: np.stack([np.asarray(b[kk]) for b in bs])
-                               for kk in bs[0]})
-        batches = {kk: jnp.asarray(np.stack([pc[kk] for pc in per_client]))
-                   for kk in per_client[0]}
-        if has_init:
-            sel_inited = client_inited[sel]
-            mode = ("update" if sel_inited.all()
-                    else "init" if not sel_inited.any() else "mixed")
-            client_inited[sel] = True
-        else:
-            mode = "update"
-        dl_mode = "init" if (dl_has_init and rnd == 0) else "update"
-        up_map, dl_map = acct.static_args()
-        base_key = round_base_key(cfg.seed, rnd)
-        params, cstate, shared, dl_state, packed = round_fn(
-            params, cstate, shared, dl_state, batches, jnp.asarray(sel),
-            base_key, up_map, dl_map, mode, dl_mode, n_sel == C,
-        )
+    def drain():
+        nonlocal pending
+        if pending is not None:
+            acct.consume(host_fetch(pending[0]), ledger, pending[1])
+            pending = None
 
-        # ---- the single host sync: ledger charge + Formula 13 --------
-        acct.consume(host_fetch(packed), ledger, rnd)
-        round_wall.append(time.perf_counter() - t_round)
+    try:
+        for rnd in range(cfg.rounds):
+            t_round = time.perf_counter()
+            ledger.begin_round()
+            item = prefetcher.get()
+            dl_mode = "init" if (dl_has_init and rnd == 0) else "update"
+            base_key = round_base_key(cfg.seed, rnd)
 
-        if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            ls, accs = zip(*[eval_step(params, b) for b in eval_batches])
-            res.eval_rounds.append(rnd)
-            res.eval_loss.append(float(np.mean([float(l) for l in ls])))
-            res.eval_acc.append(float(np.mean([float(a) for a in accs])))
-            res.uplink_bytes.append(ledger.uplink_total)
-            if progress:
-                progress(rnd, {"loss": res.eval_loss[-1], "acc": res.eval_acc[-1],
-                               "uplink": ledger.uplink_total})
+            def dispatch(maps, _i=item, _bk=base_key, _dm=dl_mode):
+                up_map, dl_map = maps
+                if ndev > 1:
+                    return round_fn(params, cstate, shared, dl_state, _i.batches,
+                                    _i.sel_dev, _i.mask_dev, _bk, up_map, dl_map,
+                                    _i.mode, _dm)
+                return round_fn(params, cstate, shared, dl_state, _i.batches,
+                                _i.sel_dev, _bk, up_map, dl_map, _i.mode, _dm,
+                                n_sel == C)
+
+            if pending is None or not speculate:
+                drain()                       # statics now exact
+                out = dispatch(acct.static_args())
+            else:
+                # Speculate across the deferred fetch: dispatch round r with the
+                # static map as of round r-2's stats, then validate against
+                # round r-1's.  The dispatch overlaps the previous round's
+                # device compute and the stats D2H transfer.
+                maps_spec = acct.static_args()
+                out = dispatch(maps_spec)
+                drain()
+                maps_true = acct.static_args()
+                if maps_true != maps_spec:
+                    if donate:                # unreachable: donate => static maps
+                        raise RuntimeError("speculation miss with donated inputs")
+                    spec_misses += 1
+                    out = dispatch(maps_true)
+            params, cstate, shared, dl_state, packed = out
+            pending = (packed, rnd)
+            if hasattr(packed, "copy_to_host_async"):
+                packed.copy_to_host_async()   # overlap the D2H with round r+1
+            round_wall.append(time.perf_counter() - t_round)
+
+            if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+                drain()                       # ledger exact before reporting
+                la = host_fetch(eval_fn(params, eval_block))
+                res.eval_rounds.append(rnd)
+                res.eval_loss.append(float(la[0]))
+                res.eval_acc.append(float(la[1]))
+                res.uplink_bytes.append(ledger.uplink_total)
+                if progress:
+                    progress(rnd, {"loss": res.eval_loss[-1], "acc": res.eval_acc[-1],
+                                   "uplink": ledger.uplink_total})
+        drain()
+    finally:
+        prefetcher.close()
 
     res.wall_s = time.time() - t0
     res.extra["engine"] = "fused"
     res.extra["use_pallas"] = use_pallas
     res.extra["round_wall_s"] = round_wall
+    res.extra["devices"] = ndev
+    res.extra["speculate"] = speculate
+    res.extra["spec_misses"] = spec_misses
+    res.extra["donated_buffers"] = donate
     res.extra.update(acct.metrics)
     return res

@@ -54,7 +54,7 @@ from .compression import (
 )
 
 __all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch",
-           "make_local_train", "make_eval_step"]
+           "make_local_train", "make_eval_step", "make_batched_eval"]
 
 
 def default_tiny_arch(vocab: int = 256) -> ArchConfig:
@@ -95,9 +95,22 @@ class FLConfig:
     #: method, including downlink compression, runs on either engine.
     engine: str = "fused"
     #: route the compression hot paths through the Pallas kernels -- the
-    #: GradESTC A/E projection and the FedPAQ/FedQClip block quantizer.
-    #: None = auto (True on TPU, False elsewhere).
+    #: GradESTC A/E projection + reconstruction and the FedPAQ/FedQClip
+    #: block quantizer.  None = auto (True on TPU, False elsewhere).
     use_pallas: Optional[bool] = None
+    #: data-parallel device count for the fused engine: the selected-client
+    #: axis of one round shards over a ("data", "model") mesh
+    #: (``launch/mesh.make_fl_mesh``) under ``shard_map``.  None/1 = the
+    #: single-device program.  Ledger bytes are identical either way.
+    devices: Optional[int] = None
+    #: pipeline the fused engine's host loop: defer the packed-stats fetch
+    #: for round r by one round and dispatch round r+1 with the current
+    #: static map, redispatching only when Formula 13 actually moves a
+    #: d bucket (``FLResult.extra["spec_misses"]`` counts those).
+    speculate: bool = True
+    #: assemble each round's batch block on a background thread,
+    #: double-buffered, ``device_put`` under the batch sharding.
+    prefetch: bool = True
 
 
 @dataclass
@@ -189,6 +202,25 @@ def make_eval_step(arch: ArchConfig):
     return eval_step
 
 
+def make_batched_eval(arch: ArchConfig):
+    """One jitted eval over the *stacked* eval block {k: (E, B, S)}.
+
+    Returns a length-2 f32 vector [mean loss, mean acc] so an eval round
+    costs exactly one device->host fetch (via ``core.metrics.host_fetch``),
+    not one blocking ``float()`` per batch -- the per-batch Python loop was
+    the last host-sync storm left in the round engines."""
+    eval_step = make_eval_step(arch)
+
+    @jax.jit
+    def eval_all(p, batch_block):
+        # lax.map, not vmap: one batch of activations live at a time, so
+        # raising eval_batches does not multiply peak eval memory.
+        ls, accs = jax.lax.map(lambda b: eval_step(p, b), batch_block)
+        return jnp.stack([jnp.mean(ls), jnp.mean(accs)]).astype(jnp.float32)
+
+    return eval_all
+
+
 @dataclass
 class _RunSetup:
     """Everything both engines must construct *identically* for parity:
@@ -203,8 +235,8 @@ class _RunSetup:
     policy: Any
     method: Any
     streams: Dict[int, Any]
-    eval_batches: List[Dict[str, jnp.ndarray]]
-    eval_step: Callable
+    eval_block: Dict[str, jnp.ndarray]
+    eval_fn: Callable
     ledger: CommLedger
     rng: np.random.Generator
     n_sel: int
@@ -224,11 +256,13 @@ def _setup_run(cfg: FLConfig) -> _RunSetup:
                for c in range(cfg.n_clients)}
     eval_stream = client_batch_stream(task, -1, cfg.batch, cfg.seq, cfg.seed + 999)
     eval_batches = [next(eval_stream) for _ in range(cfg.eval_batches)]
+    eval_block = {k: jnp.stack([b[k] for b in eval_batches])
+                  for k in eval_batches[0]}
     return _RunSetup(
         arch=arch, task=task, params=params, groups=groups,
         group_paths=list(groups.keys()), policy=policy, method=method,
-        streams=streams, eval_batches=eval_batches,
-        eval_step=make_eval_step(arch), ledger=CommLedger(),
+        streams=streams, eval_block=eval_block,
+        eval_fn=make_batched_eval(arch), ledger=CommLedger(),
         rng=np.random.default_rng(cfg.seed),
         n_sel=max(1, int(round(cfg.participation * cfg.n_clients))),
     )
@@ -247,8 +281,9 @@ def run_fl(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None
 def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] = None) -> FLResult:
     t0 = time.time()
     su = _setup_run(cfg)
-    params, eval_step = su.params, su.eval_step
-    streams, eval_batches, ledger = su.streams, su.eval_batches, su.ledger
+    params = su.params
+    eval_fn, eval_block = su.eval_fn, su.eval_block
+    streams, ledger = su.streams, su.ledger
     rng, group_paths, n_sel = su.rng, su.group_paths, su.n_sel
     policy = su.policy
     C = cfg.n_clients
@@ -362,10 +397,12 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
         round_wall.append(time.perf_counter() - t_round)
 
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            ls, accs = zip(*[eval_step(params, b) for b in eval_batches])
+            # one jitted eval over the stacked block, one measured fetch --
+            # not one blocking float() per batch.
+            la = host_fetch(eval_fn(params, eval_block))
             res.eval_rounds.append(rnd)
-            res.eval_loss.append(float(np.mean([float(l) for l in ls])))
-            res.eval_acc.append(float(np.mean([float(a) for a in accs])))
+            res.eval_loss.append(float(la[0]))
+            res.eval_acc.append(float(la[1]))
             res.uplink_bytes.append(ledger.uplink_total)
             if progress:
                 progress(rnd, {

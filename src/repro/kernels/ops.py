@@ -92,8 +92,11 @@ def decode(
     l, k = M.shape
     m = A.shape[1]
     bl = 256 if l % 256 == 0 else (128 if l % 128 == 0 else l)
-    Ap, pad = _pad_cols(A, 256)
-    out = decode_pallas(M, Ap, block_l=bl, block_m=256, interpret=interp)
+    # Never tile wider than the coefficient matrix itself: a small-m A only
+    # pays for padding to the next 128 multiple (same rule as encode).
+    bm = min(256, m + ((-m) % 128))
+    Ap, pad = _pad_cols(A, bm)
+    out = decode_pallas(M, Ap, block_l=bl, block_m=bm, interpret=interp)
     return out[:, :m] if pad else out
 
 

@@ -35,7 +35,7 @@ from repro.models.config import ArchConfig, InputShape
 
 __all__ = [
     "MeshPlan", "make_plan", "param_specs", "batch_specs", "cache_specs",
-    "named", "axis_size",
+    "named", "axis_size", "FLRoundSpecs",
 ]
 
 #: per-replica bf16 bytes above which clients can no longer hold replicas on
@@ -230,6 +230,75 @@ def client_stacked_specs(plan: MeshPlan, params: Any) -> Any:
         lambda s: P(cspec, *s), base,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# --------------------------------------------------------------------------
+# FL round specs (consumed by fl/engine.py's sharded round)
+# --------------------------------------------------------------------------
+
+
+class FLRoundSpecs:
+    """Axis assignment for one sharded fused FL round (DESIGN.md Sec. 10).
+
+    Everything the single-host engine needs to run one round under
+    ``shard_map``: which mesh axes enumerate the selected clients, the
+    batch-block placement (via :func:`batch_specs`), and the specs for the
+    per-selected-client vectors (client ids, padding mask).  Model params,
+    codec shared state, and the persistent per-client state store stay
+    replicated (``P()``); only the *selected-client* axis shards.
+    """
+
+    def __init__(self, plan: MeshPlan):
+        self.plan = plan
+        self.mesh = plan.mesh
+        cl = plan.client_axes
+        if not cl:
+            raise ValueError(
+                f"mesh {plan.mesh.axis_names} has no client axes for FL "
+                "(need 'data' and/or 'pod')")
+        if plan.inner_batch_axes:
+            # batch_specs places inner batch axes on dim 1, which in the FL
+            # round block (C, steps, B, S) is local_steps -- meshes whose
+            # non-model axes are not all client axes need a per-client
+            # batch sharding rule that does not exist yet.
+            raise ValueError(
+                f"mesh {plan.mesh.axis_names}: non-client batch axes "
+                f"{plan.inner_batch_axes} are not supported for the "
+                "sharded FL round (use make_fl_mesh)")
+        #: axis-name argument for collectives (psum / all_gather)
+        self.client_axis_name = cl if len(cl) > 1 else cl[0]
+        #: spec for (C_pad,) per-selected-client vectors (sel ids, mask)
+        self.client_vec = P(self.client_axis_name)
+        #: replicated spec (params, codec state stores, shared state)
+        self.replicated = P()
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_clients     # product of client-axis sizes
+
+    def batch(self, batches) -> Dict[str, P]:
+        """Specs for the (C_pad, steps, B, S) round batch block."""
+        return batch_specs(self.plan, batches, client_axis=True)
+
+    def pad_clients(self, n_sel: int) -> int:
+        """Selected-client axis padded up to a multiple of the shard count."""
+        s = self.n_shards
+        return -(-n_sel // s) * s
+
+    # -- device placement --------------------------------------------------
+
+    def put_batch(self, batches):
+        """``device_put`` a host batch block under the batch sharding."""
+        specs = self.batch(batches)
+        return {k: jax.device_put(v, named(self.mesh, specs[k]))
+                for k, v in batches.items()}
+
+    def put_client_vec(self, v):
+        return jax.device_put(v, named(self.mesh, self.client_vec))
+
+    def put_replicated(self, tree):
+        sh = named(self.mesh, P())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
 
 # --------------------------------------------------------------------------

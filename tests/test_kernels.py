@@ -132,6 +132,39 @@ class TestOpsWrappers:
         np.testing.assert_allclose(np.asarray(A), np.asarray(A0), atol=1e-4)
 
 
+class TestDecodeWiring:
+    """The decode kernel is wired into the GradESTC reconstruction and
+    downlink decode paths (``core.gradestc.reconstruct`` / ``decompress``)
+    under the same use_pallas flag as encode."""
+
+    def test_reconstruct_routes_through_decode_kernel(self, key):
+        from repro.core import gradestc as ge
+        M = _orthonormal(key, 96, 8, jnp.float32)
+        A = jax.random.normal(jax.random.PRNGKey(7), (8, 100), jnp.float32)
+        out = ge.reconstruct(M, A, use_pallas=True, pallas_interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(M @ A),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_decompress_pallas_matches_plain(self, key):
+        from repro.core import gradestc as ge
+        l, k, d, m = 64, 4, 2, 37
+        M = _orthonormal(key, l, k, jnp.float32)
+        payload = ge.Payload(
+            replaced_mask=jnp.array([True, False, True, False]),
+            new_vectors=jax.random.normal(jax.random.PRNGKey(8), (d, l)),
+            coeffs=jax.random.normal(jax.random.PRNGKey(9), (k, m)),
+            d_r=jnp.asarray(d, jnp.int32),
+            init=jnp.zeros((), jnp.bool_),
+        )
+        st = ge.DecompressorState(M=M)
+        st0, g0 = ge.decompress(st, payload)
+        st1, g1 = ge.decompress(st, payload, use_pallas=True,
+                                pallas_interpret=True)
+        np.testing.assert_array_equal(np.asarray(st0.M), np.asarray(st1.M))
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
+                                   rtol=1e-4, atol=1e-4)
+
+
 class TestFlashAttention:
     """Fused flash attention kernel (SPerf, qwen2 prefill) vs the reference
     attention path."""

@@ -104,25 +104,43 @@ class TestFusedLoopParity:
     def test_single_host_sync_per_round(self, method):
         """The fused engine's contract: one device->host fetch per round,
         for every method (any codec that silently fell back to per-value
-        fetches would fail this)."""
+        fetches would fail this).  Eval rounds add exactly one measured
+        fetch each -- the stacked-batch eval, not one float() per batch."""
         rounds = 4
         metrics.reset_host_sync_count()
         res = run_fl(_cfg(method=method, engine="fused", rounds=rounds,
                           eval_every=100))
         assert res.extra["engine"] == "fused"
-        assert metrics.host_sync_count() == rounds
+        assert metrics.host_sync_count() == rounds + len(res.eval_rounds)
 
     def test_loop_obeys_same_sync_budget(self):
         """The reference loop routes byte accounting through the same
         packed-stats path: one measured fetch per round (it used to pay one
-        blocking ``float(sc)`` per (client, tensor))."""
+        blocking ``float(sc)`` per (client, tensor)), plus one per eval."""
         rounds = 3
         for method in ("gradestc", "topk"):
             metrics.reset_host_sync_count()
             res = run_fl(_cfg(method=method, engine="loop", rounds=rounds,
                               eval_every=100))
             assert res.extra["engine"] == "loop"
-            assert metrics.host_sync_count() == rounds
+            assert metrics.host_sync_count() == rounds + len(res.eval_rounds)
+
+    def test_pipeline_knobs_do_not_change_results(self):
+        """Speculative deferred-stats dispatch, buffer donation, and the
+        prefetch thread are pure pipelining: switching them off must not
+        move the trajectory or a single ledger byte."""
+        on = run_fl(_cfg(engine="fused", rounds=5))
+        off = run_fl(_cfg(engine="fused", rounds=5, speculate=False,
+                          prefetch=False))
+        np.testing.assert_allclose(on.eval_loss, off.eval_loss, rtol=0,
+                                   atol=1e-7)
+        assert on.ledger.per_round_uplink == off.ledger.per_round_uplink
+        assert on.ledger.uplink_total == off.ledger.uplink_total
+        # gradestc-full has dynamic statics: the speculative run keeps its
+        # replay inputs (no donation), the blocking run donates.
+        assert on.extra["donated_buffers"] is False
+        assert off.extra["donated_buffers"] is True
+        assert off.extra["spec_misses"] == 0
 
     def test_pallas_encode_inside_engine_matches(self):
         """use_pallas routes A/E through the kernel (interpret on CPU) and
