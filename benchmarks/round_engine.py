@@ -1,33 +1,46 @@
-"""Round-engine benchmark: fused single-program round vs per-client loop,
-per *method* (the codec protocol runs every Table III method fused), plus
-the device-count sweep for the sharded round (DESIGN.md Sec. 10).
+"""Round-engine benchmark: K-round scan-fused chunks vs per-round fused vs
+per-client loop, per *method* (the codec protocol runs every Table III
+method fused), plus the device-count sweep for the sharded round
+(DESIGN.md Secs. 10-11).
 
 Measures, for each method at the configured client counts on the current
 backend:
 
-  * steady-state rounds/sec per engine -- the median per-round wall time
-    *after* the warmup rounds, reported separately from the first round
-    (which is dominated by XLA trace+compile time; mixing it into the mean
-    would swamp the per-method steady-state comparison);
-  * measured host syncs per round (every device->host fetch in the FL
-    runtime goes through ``core.metrics.host_fetch``; round accounting
-    contracts to exactly 1 -- the packed stats vector -- with eval-round
-    fetches counted separately via ``FLResult.eval_rounds``);
-  * the fused-over-loop steady-state speedup.
+  * steady-state rounds/sec per engine configuration -- the median
+    per-round wall time after the warmup span (first chunk of every
+    distinct shape), reported separately from the first round;
+  * ``first_round_ms`` split into **compile vs execute**: a
+    ``jax.monitoring`` listener (``repro.launch.compile_cache.
+    CompileWatcher``) attributes compilation-pipeline time received during
+    the first chunk's dispatch window.  For K>1 rows the K-length chunk
+    executable compiles at *its* first dispatch (chunk 1), so the whole
+    cold start is ``compile_ms`` -- with zero mid-run recompiles
+    (asserted below) every compile in the run is cold-start cost, and the
+    persistent compilation cache -- enabled for every run here -- erases
+    most of it on repeat invocations;
+  * measured host syncs (every device->host fetch in the FL runtime goes
+    through ``core.metrics.host_fetch``): the scan engine's contract is
+    **one packed-stats fetch per chunk of K rounds**, so
+    ``host_syncs_per_round`` drops to 1/K; eval fetches are counted
+    separately via ``FLResult.eval_rounds``;
+  * ``mid_run_recompiles`` -- chunk executables compiled beyond one per
+    distinct chunk shape.  The rank-padded traced-``d`` codecs make this
+    identically 0 (nothing shape-relevant changes between rounds); CI
+    asserts it.
 
 The **device sweep** additionally runs the fused engine sharded over
-1/4/8 host-platform devices (each count in its own subprocess, forcing
+forced host-platform devices (each count in its own subprocess, forcing
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax imports)
-and reports per-count round wall, speedup over 1 device, scaling
-efficiency (speedup/N), and the pipeline overlap won by the speculative
-deferred-stats host loop (``speculate`` on vs off).  ``host_cores`` is
-recorded alongside: on machines with fewer physical cores than devices the
-sweep measures oversubscribed lockstep, not real scaling.
+at K=1 and K=SCAN_K, reporting per-count round wall, scaling efficiency,
+and the scan amortization (K-chunk speedup over per-round dispatch) --
+``host_cores`` is recorded alongside: on machines with fewer physical
+cores than devices the sweep measures oversubscribed lockstep, not real
+scaling.
 
 The model is deliberately tiny: the engines run *identical* math, so at
-equal compute the ratio isolates per-client dispatch overhead, which is
-what dominates FL simulation at the 100+ client scale of the paper's
-comparisons.
+equal compute the ratio isolates per-round dispatch + host-sync overhead,
+which is what dominates FL simulation at the 100+ client scale of the
+paper's comparisons.
 
 Emits ``BENCH_round_engine.json`` (committed at the repo root so the perf
 trajectory is tracked PR-over-PR).
@@ -53,14 +66,17 @@ import numpy as np
 
 from repro.core import metrics
 from repro.fl import FLConfig, run_fl
+from repro.launch.compile_cache import CompileWatcher, enable_compilation_cache
 from repro.models.config import ArchConfig
 
-#: every method is benchmarked at this client count (the acceptance bar:
-#: >= 2x fused-over-loop for the baselines at 50 clients on CPU) ...
+#: every method is benchmarked at this client count ...
 METHOD_CLIENTS = 50
 #: ... and GradESTC additionally sweeps the scaling curve.
 GRADESTC_CLIENTS = (10, 50, 100)
 METHODS = ("gradestc", "topk", "fedpaq", "signsgd", "fedqclip", "svdfed")
+#: chunk length for the scan-fused engine rows (K=1 is the per-round
+#: fused baseline the acceptance bar compares against).
+SCAN_K = 8
 #: the sharded-round device sweep (fused engine only).  1/4/8 are the
 #: acceptance points; 2 is included because this matters on small hosts:
 #: scaling saturates at the physical core count (``host_cores`` rides in
@@ -68,7 +84,7 @@ METHODS = ("gradestc", "topk", "fedpaq", "signsgd", "fedqclip", "svdfed")
 #: one measuring real parallelism rather than oversubscribed lockstep.
 DEVICE_SWEEP = (1, 2, 4, 8)
 SWEEP_METHODS = ("gradestc", "fedpaq")
-WARMUP_ROUNDS = 4          # covers init round + Formula-13 d re-bucketing compiles
+WARMUP_ROUNDS = 4          # per-round engines: covers the compile rounds
 MEASURED_ROUNDS = 8
 
 
@@ -82,47 +98,79 @@ def bench_arch() -> ArchConfig:
 
 
 def bench_cfg(method: str, engine: str, n_clients: int, *, devices: int = 1,
-              speculate: bool = True, rounds: int | None = None) -> FLConfig:
+              scan_rounds: int = 1, rounds: int) -> FLConfig:
     return FLConfig(
-        method=method,
-        rounds=WARMUP_ROUNDS + MEASURED_ROUNDS if rounds is None else rounds,
+        method=method, rounds=rounds,
         n_clients=n_clients, local_steps=1, batch=1, seq=8,
         eval_every=10 ** 9, seed=0, arch=bench_arch(), engine=engine,
-        devices=devices, speculate=speculate,
+        devices=devices, scan_rounds=scan_rounds,
     )
 
 
 def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
-            speculate: bool = True, rounds: int | None = None) -> dict:
+            scan_rounds: int = 1, rounds: int | None = None) -> dict:
+    # warm until the first chunk of every distinct shape has run: chunk 0
+    # (length 1, ends at the round-0 eval point) plus one full K chunk.
+    warm = (1 + scan_rounds if engine == "fused" and scan_rounds > 1
+            else WARMUP_ROUNDS)
+    total = warm + MEASURED_ROUNDS if rounds is None else rounds
+    warm = min(warm, total - 1)
     cfg = bench_cfg(method, engine, n_clients, devices=devices,
-                    speculate=speculate, rounds=rounds)
-    warm = min(WARMUP_ROUNDS, cfg.rounds - 1)
+                    scan_rounds=scan_rounds, rounds=total)
+    watcher = CompileWatcher.install()
+    mark = watcher.snapshot()
     metrics.reset_host_sync_count()
     res = run_fl(cfg)
     syncs = metrics.host_sync_count()
+    compile_count, compile_s = watcher.since(mark)
     wall = res.extra["round_wall_s"]
     steady = float(np.median(wall[warm:]))
-    return {
+    spans = res.extra.get("chunk_spans") or []
+    first_ms = wall[0] * 1e3
+    if spans:      # compile time received during the first chunk's dispatch
+        # window: [dispatch start, dispatch end] of chunk 0, so the split
+        # decomposes first_round_ms itself (setup compiles before chunk 0
+        # -- e.g. the selection-table vmap -- land only in compile_ms).
+        # Nested jits traced inline emit their own trace events inside the
+        # outer program's, so the summed pipeline time can exceed the wall
+        # window; clamp to it (the remainder is the execute share).
+        _, first_compile_s = watcher.since(mark, t_start=spans[0][0],
+                                           t_end=spans[0][1])
+        first_compile_s = min(first_compile_s, first_ms / 1e3)
+    else:          # loop engine: compiles spread over the first rounds
+        first_compile_s = 0.0
+    row = {
         "engine": res.extra["engine"],
         "method": method,
         "n_clients": n_clients,
         "devices": devices,
-        "speculate": speculate,
-        # steady state and trace/compile cost reported separately: round 0
-        # is dominated by compilation and would otherwise skew any mean.
+        "scan_rounds": res.extra.get("scan_rounds", 0),
+        # steady state and trace/compile cost reported separately: the
+        # first chunk of each shape is dominated by compilation and would
+        # otherwise skew any mean.
         "steady_round_ms": steady * 1e3,
-        "first_round_ms": wall[0] * 1e3,
+        "first_round_ms": first_ms,
+        "first_round_compile_ms": first_compile_s * 1e3,
+        "first_round_execute_ms": max(0.0, first_ms - first_compile_s * 1e3),
+        "compile_ms": compile_s * 1e3,
+        "compile_count": compile_count,
         "rounds_per_sec": 1.0 / steady,
         # round accounting syncs only; eval rounds fetch once each and are
-        # excluded so the contract stays "exactly 1 per round".
-        "host_syncs_per_round": (syncs - len(res.eval_rounds)) / cfg.rounds,
-        "spec_misses": res.extra.get("spec_misses", 0),
+        # excluded.  The scan engine fetches once per chunk -> 1/K per
+        # round; the loop and K=1 engines stay at exactly 1.
+        "host_syncs_per_round": (syncs - len(res.eval_rounds)) / total,
+        "chunks": res.extra.get("chunks"),
+        "chunk_compiles": res.extra.get("chunk_compiles"),
+        "mid_run_recompiles": (
+            res.extra["chunk_compiles"] - res.extra["chunk_shapes"]
+            if res.extra.get("chunk_compiles", -1) >= 0 else None),
         "warmup_rounds": warm,
-        "measured_rounds": cfg.rounds - warm,
+        "measured_rounds": total - warm,
         "total_wall_s": res.wall_s,
         "final_eval_loss": res.eval_loss[-1],
         "uplink_total_bytes": res.ledger.uplink_total,
     }
+    return row
 
 
 # ---------------------------------------------------------------------------
@@ -131,14 +179,14 @@ def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
 # ---------------------------------------------------------------------------
 
 def run_child(devices: int, methods, clients: int, rounds: int | None,
-              out: pathlib.Path) -> dict:
+              scan: int, out: pathlib.Path) -> dict:
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
     env["XLA_FLAGS"] = (
         f"{flags} --xla_force_host_platform_device_count={devices}".strip())
     cmd = [sys.executable, str(pathlib.Path(__file__).resolve()), "--child",
            "--devices", str(devices), "--clients", str(clients),
-           "--methods", *methods, "--out", str(out)]
+           "--scan", str(scan), "--methods", *methods, "--out", str(out)]
     if rounds is not None:
         cmd += ["--rounds", str(rounds)]
     subprocess.run(cmd, check=True, env=env)
@@ -146,57 +194,61 @@ def run_child(devices: int, methods, clients: int, rounds: int | None,
 
 
 def child_main(args) -> int:
+    enable_compilation_cache()
     clients = args.clients[0] if args.clients else METHOD_CLIENTS
     results = []
     for method in args.methods:
-        for speculate in (True, False):
+        for scan_rounds in (1, args.scan):
             results.append(measure(method, "fused", clients,
-                                   devices=args.devices, speculate=speculate,
+                                   devices=args.devices,
+                                   scan_rounds=scan_rounds,
                                    rounds=args.rounds))
     pathlib.Path(args.out).write_text(json.dumps(results))
     return 0
 
 
-def device_sweep(sweep, methods, clients: int, rounds: int | None) -> dict:
+def device_sweep(sweep, methods, clients: int, rounds: int | None,
+                 scan: int) -> dict:
     if jax.default_backend() != "cpu":
         print("device sweep: skipping (forced host devices are CPU-only)")
         return {}
     rows = []
     for n in sweep:
         with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
-            rows += run_child(n, methods, clients, rounds,
+            rows += run_child(n, methods, clients, rounds, scan,
                               pathlib.Path(tmp.name))
         for r in rows[-2 * len(methods):]:
-            tag = "spec" if r["speculate"] else "nospec"
-            print(f"  sweep {r['method']:10s} devices={n} [{tag:6s}] "
+            print(f"  sweep {r['method']:10s} devices={n} "
+                  f"[K={r['scan_rounds']}] "
                   f"{r['steady_round_ms']:7.1f} ms/round "
-                  f"({r['host_syncs_per_round']:.1f} syncs, "
-                  f"{r['spec_misses']} misses)")
+                  f"({r['host_syncs_per_round']:.2f} syncs/round, "
+                  f"{r['mid_run_recompiles']} recompiles)")
     base = {(r["method"]): r["steady_round_ms"] for r in rows
-            if r["devices"] == sweep[0] and r["speculate"]}
-    speedup, efficiency, overlap = {}, {}, {}
+            if r["devices"] == sweep[0] and r["scan_rounds"] == scan}
+    speedup, efficiency, amortization = {}, {}, {}
     for r in rows:
         m, n = r["method"], r["devices"]
-        if r["speculate"]:
+        if r["scan_rounds"] == scan:
             sp = base[m] / r["steady_round_ms"]
             speedup.setdefault(m, {})[str(n)] = sp
             efficiency.setdefault(m, {})[str(n)] = sp / (n / sweep[0])
-        else:
-            on = next(x for x in rows if x["method"] == m
-                      and x["devices"] == n and x["speculate"])
-            overlap.setdefault(m, {})[str(n)] = (
-                r["steady_round_ms"] / on["steady_round_ms"])
+        else:     # the K=1 row at the same device count
+            kr = next(x for x in rows if x["method"] == m
+                      and x["devices"] == n and x["scan_rounds"] == scan)
+            amortization.setdefault(m, {})[str(n)] = (
+                r["steady_round_ms"] / kr["steady_round_ms"])
     return {
         "clients": clients,
         "methods": list(methods),
         "device_counts": list(sweep),
+        "scan_rounds": scan,
         "host_cores": os.cpu_count(),
         "results": rows,
         "speedup_vs_first": speedup,
         "scaling_efficiency": efficiency,
-        # >1 means the speculative deferred-stats pipeline beats the
-        # blocking (speculate=False) host loop at that device count.
-        "pipeline_overlap": overlap,
+        # >1 means the K-round scan chunk beats per-round dispatch (K=1)
+        # at that device count.
+        "scan_amortization": amortization,
     }
 
 
@@ -210,8 +262,10 @@ def main(argv=None) -> int:
     ap.add_argument("--device-sweep", type=int, nargs="*",
                     default=list(DEVICE_SWEEP),
                     help="device counts for the sharded sweep ([] disables)")
+    ap.add_argument("--scan", type=int, default=SCAN_K,
+                    help="chunk length K for the scan-fused rows")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: 1 method, 5 rounds, devices 1+2, "
+                    help="CI smoke: 1 method, few rounds, devices 1+2, "
                     "no loop-engine grid")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--devices", type=int, default=1, help=argparse.SUPPRESS)
@@ -221,6 +275,7 @@ def main(argv=None) -> int:
     if args.child:
         return child_main(args)
 
+    enable_compilation_cache()
     sweep_rounds = None
     sweep = args.device_sweep
     # the sweep honors --methods: sweep only the requested subset of the
@@ -229,15 +284,21 @@ def main(argv=None) -> int:
     if not sweep_methods:
         sweep = []
     sweep_clients = (args.clients[0] if args.clients else METHOD_CLIENTS)
+    if args.scan < 2:
+        ap.error("--scan must be >= 2 (K=1 is always benchmarked as the "
+                 "per-round fused baseline)")
+    scan = args.scan
     if args.smoke:
         args.methods = ["gradestc"]
         sweep_methods = ["gradestc"]
         sweep = [1, 2]
-        sweep_rounds = 5
+        scan = 4
+        sweep_rounds = 1 + scan + 4     # chunk 0 + one K chunk + remainder
         sweep_clients = 8
 
     results = []
     speedups: dict = {}
+    scan_speedups: dict = {}
     if not args.smoke:
         grid = []
         for method in args.methods:
@@ -247,21 +308,25 @@ def main(argv=None) -> int:
             grid += [(method, C) for C in counts]
         for method, C in grid:
             loop = measure(method, "loop", C)
-            fused = measure(method, "fused", C)
-            results += [loop, fused]
+            fused = measure(method, "fused", C, scan_rounds=1)
+            chunk = measure(method, "fused", C, scan_rounds=scan)
+            results += [loop, fused, chunk]
             sp = loop["steady_round_ms"] / fused["steady_round_ms"]
+            sc = fused["steady_round_ms"] / chunk["steady_round_ms"]
             speedups.setdefault(method, {})[str(C)] = sp
+            scan_speedups.setdefault(method, {})[str(C)] = sc
             print(f"{method:10s} n_clients={C:4d}  "
-                  f"loop {loop['steady_round_ms']:8.1f} ms/round "
-                  f"({loop['host_syncs_per_round']:.1f} syncs)   "
-                  f"fused {fused['steady_round_ms']:8.1f} ms/round "
-                  f"({fused['host_syncs_per_round']:.1f} syncs)   "
-                  f"speedup {sp:.2f}x   "
-                  f"[first round: loop {loop['first_round_ms']:.0f} ms, "
-                  f"fused {fused['first_round_ms']:.0f} ms]")
+                  f"loop {loop['steady_round_ms']:8.1f} ms/round   "
+                  f"fused(K=1) {fused['steady_round_ms']:7.1f} ms   "
+                  f"scan(K={scan}) {chunk['steady_round_ms']:7.1f} ms "
+                  f"({chunk['host_syncs_per_round']:.2f} syncs/round)   "
+                  f"fused/loop {sp:.2f}x  scan/fused {sc:.2f}x   "
+                  f"[first round: {chunk['first_round_compile_ms']:.0f} ms "
+                  f"compile + {chunk['first_round_execute_ms']:.0f} ms exec; "
+                  f"run compile total {chunk['compile_ms']:.0f} ms]")
 
     sweep_payload = (device_sweep(sweep, sweep_methods, sweep_clients,
-                                  sweep_rounds) if sweep else {})
+                                  sweep_rounds, scan) if sweep else {})
 
     payload = {
         "benchmark": "round_engine",
@@ -269,9 +334,10 @@ def main(argv=None) -> int:
         "device": str(jax.devices()[0]),
         "arch": dataclasses.asdict(bench_arch()),
         "config": {"local_steps": 1, "batch": 1, "seq": 8,
-                   "methods": args.methods},
+                   "methods": args.methods, "scan_rounds": scan},
         "results": results,
         "speedup_fused_over_loop": speedups,
+        "speedup_scan_over_fused": scan_speedups,
         "device_sweep": sweep_payload,
     }
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")

@@ -22,10 +22,12 @@ from .gradestc import (
     CompressStats,
     compress,
     compress_init,
+    compress_step,
     compress_update,
     decompress,
     init_compressor,
     next_candidate_count,
+    next_candidate_count_jax,
 )
 from .policy import CompressionPolicy, LayerPlan, make_policy
 from .reshaping import matrix_to_tensor, reshape_to_matrix, segment, unsegment
@@ -35,8 +37,9 @@ __all__ = [
     "baselines", "codecs", "error_feedback", "gradestc", "metrics", "policy",
     "reshaping", "rsvd",
     "CompressorState", "DecompressorState", "Payload", "CompressStats",
-    "compress", "compress_init", "compress_update", "decompress",
-    "init_compressor", "next_candidate_count",
+    "compress", "compress_init", "compress_step", "compress_update",
+    "decompress", "init_compressor", "next_candidate_count",
+    "next_candidate_count_jax",
     "CompressionPolicy", "LayerPlan", "make_policy",
     "matrix_to_tensor", "reshape_to_matrix", "segment", "unsegment",
     "randomized_svd",

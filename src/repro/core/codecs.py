@@ -11,16 +11,23 @@ engine serve every method:
     client encodes is ``vmap(encode)`` over that axis;
   * ``init_shared_state()`` returns server-side state shared by all clients
     (SVDFed's basis; ``()`` for the rest);
-  * ``encode(cstate, shared, key, wire, static, mode)`` is the per-client
-    step: returns the new client state, the server-side reconstruction in
-    wire layout, and a small **int32 stats vector** -- the only thing the
-    host ever needs to see;
+  * ``encode(cstate, shared, key, wire)`` is the per-client step: returns
+    the new client state, the server-side reconstruction in wire layout,
+    and a small **int32 stats vector** -- the only thing the host ever
+    needs to see.  It is **branch-free across rounds**: no static ``d``,
+    no init/update ``mode`` -- every per-round configuration that used to
+    be a jit-static argument is a traced value over rank-padded buffers
+    (GradESTC's Formula-13 candidate count ``d`` rides the shared state as
+    a traced int32 and masks a ``d_max``-capacity sketch;
+    ``core/gradestc.compress_step``), so one compiled program serves every
+    round and the whole round chain can live inside a ``lax.scan``;
   * ``reduce_stats`` / ``update_shared`` run in-jit after the client vmap
-    (cross-client stat reduction; SVDFed's conditional basis refit);
-  * ``charge_bits`` / ``init_static`` / ``next_static`` are host-side pure
-    functions over the fetched stats: exact integer bit accounting
-    (Formula 14 and each baseline's wire format) and the per-round static
-    configuration (GradESTC's Formula 13 candidate count ``d``).
+    (cross-client stat reduction; SVDFed's conditional basis refit;
+    GradESTC's in-jit Formula 13 advancing ``d`` for the next round);
+  * ``charge_bits`` is a host-side pure function over the fetched stats:
+    exact integer bit accounting (Formula 14 and each baseline's wire
+    format).  Everything the host needs -- including the ``d`` a round
+    actually used -- travels in the packed stats vector.
 
 Layout: a codec owns its wire layout via ``to_wire`` / ``from_wire``.
 GradESTC works on stacked ``(L, l, m)`` segment matrices; the per-tensor
@@ -29,11 +36,12 @@ clients by the engine's vmap, the flat analogue of GradESTC's
 ``(C, L, l, k)`` basis stacking).
 
 Byte accounting is **integer bits** end to end: ``charge_bits`` returns a
-Python int, and the ledger is charged ``bits / 32`` scalars (exact -- a
-dyadic rational, so f32/f64 rounding above 2^24 scalars cannot skew
-Table III totals the way the old per-tensor ``float(sc)`` accumulation
-could).  Data-dependent counts (GradESTC's d_r, SVDFed's refit flag) travel
-in the packed stats vector; everything else is shape-static.
+Python int, and the ledger accumulates those integer bits directly
+(``CommLedger.charge_uplink_bits`` -- no float scalar conversion anywhere,
+so f32/f64 rounding above 2^24 scalars cannot skew Table III totals the way
+the old per-tensor ``float(sc)`` accumulation could).  Data-dependent
+counts (GradESTC's d_r and per-round d, SVDFed's refit flag) travel in the
+packed stats vector; everything else is shape-static.
 
 PRNG: every stream is a ``fold_in`` chain (PYTHONHASHSEED-independent, and
 derivable from traced ints inside a jitted round): per-round codec
@@ -103,17 +111,6 @@ class Codec:
     client_stats_len: int = 0
     #: length of the reduced per-group stats vector (packed host transfer)
     stats_len: int = 0
-    #: True when the first selection of a client compiles a different branch
-    #: (the engine tracks host-side which clients are initialized and
-    #: specializes the round's ``mode`` to keep steady rounds cond-free)
-    has_init_branch: bool = False
-    #: True when ``next_static`` can actually move the static config between
-    #: rounds (GradESTC's Formula 13 d re-bucketing).  The pipelined engine
-    #: speculates across the deferred stats fetch only for dynamic-static
-    #: codecs; static-free codecs always speculate for free -- and the
-    #: engine keeps the round's inputs un-donated exactly when a
-    #: speculation miss could force a redispatch.
-    dynamic_static: bool = False
 
     def __init__(self, path_idx: int = 0):
         self.path_idx = path_idx
@@ -134,8 +131,12 @@ class Codec:
         return wire.reshape(shape)
 
     # -- per-client encode (vmapped over the client axis by the engine) ----
-    def encode(self, cstate, shared, key, wire, static, mode):
-        """-> (cstate', recon_wire, stats int32 (client_stats_len,))."""
+    def encode(self, cstate, shared, key, wire):
+        """-> (cstate', recon_wire, stats int32 (client_stats_len,)).
+
+        Must be branch-free across rounds: no jit-static per-round
+        arguments.  Round-varying configuration rides ``shared`` (traced)
+        or ``cstate`` (per-client traced flags)."""
         raise NotImplementedError
 
     # -- in-jit cross-client reduction / server-side update ----------------
@@ -152,19 +153,14 @@ class Codec:
         return jax.random.fold_in(jax.random.fold_in(base_key, client),
                                   self.path_idx)
 
-    def init_static(self):
-        """Initial per-round static config (hashable; None if unused)."""
-        return None
+    def charge_bits(self, reduced: np.ndarray, n_sel: int) -> int:
+        """Exact uplink bits for ``n_sel`` clients this round (Python int).
 
-    def next_static(self, reduced: np.ndarray, static):
-        """Host rule updating the static config from fetched stats."""
-        return static
-
-    def charge_bits(self, reduced: np.ndarray, n_sel: int, static) -> int:
-        """Exact uplink bits for ``n_sel`` clients this round (Python int)."""
+        Every data-dependent count it needs must travel in ``reduced`` --
+        there is no host-side per-round config left to consult."""
         raise NotImplementedError
 
-    def host_metrics(self, reduced: np.ndarray, n_sel: int, static) -> Dict[str, int]:
+    def host_metrics(self, reduced: np.ndarray, n_sel: int) -> Dict[str, int]:
         """Optional per-round host-side metric increments (e.g. sum_d)."""
         return {}
 
@@ -197,11 +193,11 @@ class TopKCodec(_FlatCodec):
     def init_client_state(self, n_clients: int, client_ids=None):
         return jnp.zeros((n_clients, self.n), jnp.float32)
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         st, ghat, _ = bl.topk_compress(bl.TopKState(cstate), wire, self.k)
         return st.memory, ghat, jnp.zeros((0,), jnp.int32)
 
-    def charge_bits(self, reduced, n_sel, static):
+    def charge_bits(self, reduced, n_sel):
         return 32 * 2 * self.k * n_sel
 
 
@@ -232,25 +228,25 @@ class FedPAQCodec(_FlatCodec):
             use_pallas=self.use_pallas, interpret=self.pallas_interpret,
         )
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         return (), self._quantize(wire, key), jnp.zeros((0,), jnp.int32)
 
     @property
     def _n_scales(self) -> int:
         return -(-self.n // self.block) if self.use_pallas else 1
 
-    def charge_bits(self, reduced, n_sel, static):
+    def charge_bits(self, reduced, n_sel):
         return (self.n * self.bits + 32 * self._n_scales) * n_sel
 
 
 class SignSGDCodec(_FlatCodec):
     """1-bit sign compression with a mean-magnitude scale (ref [20])."""
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         ghat, _ = bl.sign_compress(wire)
         return (), ghat, jnp.zeros((0,), jnp.int32)
 
-    def charge_bits(self, reduced, n_sel, static):
+    def charge_bits(self, reduced, n_sel):
         return (self.n + 32) * n_sel
 
 
@@ -263,7 +259,7 @@ class FedQClipCodec(FedPAQCodec):
         super().__init__(n, bits, path_idx, use_pallas, pallas_interpret, block)
         self.clip = float(clip)
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         norm = jnp.linalg.norm(wire)
         clipped = wire * jnp.minimum(1.0, self.clip / jnp.maximum(norm, 1e-12))
         return (), self._quantize(clipped, key), jnp.zeros((0,), jnp.int32)
@@ -325,7 +321,7 @@ class SVDFedCodec(_MatrixCodec):
         return (jnp.zeros((plan.stack, plan.l, plan.k), jnp.float32),
                 key, jnp.ones((), jnp.bool_))
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         M, _, refit = shared
         A = jnp.einsum("xlk,xlm->xkm", M, wire)
         Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
@@ -353,7 +349,7 @@ class SVDFedCodec(_MatrixCodec):
         M2 = jax.lax.cond(refit, _fit, lambda _: M, operand=None)
         return (M2, key2, reduced_stats[1] > 0)
 
-    def charge_bits(self, reduced, n_sel, static):
+    def charge_bits(self, reduced, n_sel):
         plan = self.plan
         if int(reduced[0]):                       # refit round: raw uplink
             return 32 * plan.raw_scalars * n_sel
@@ -361,28 +357,30 @@ class SVDFedCodec(_MatrixCodec):
 
 
 class GradESTCCodec(_MatrixCodec):
-    """The paper's spatio-temporal compressor (Algorithms 1-2).
+    """The paper's spatio-temporal compressor (Algorithms 1-2), rank-padded.
 
     Per-client state: basis stack ``(L, l, k)``, rSVD key stack ``(L, 2)``,
     per-layer init flags ``(L,)`` -- stacked to ``(C, ...)`` by the engine.
-    ``static`` is the rSVD candidate count ``d`` (XLA needs a static sketch
-    shape); ``next_static`` is Formula 13 on the round's max d_r, bucketed
-    to powers of two.  ``mode`` statically selects the branch structure:
+    The Formula-13 candidate count ``d`` is a **traced** int32 riding the
+    *shared* state: ``encode`` masks a static ``d_max``-capacity sketch
+    (``core/gradestc.compress_step``) with it, and ``update_shared``
+    advances it in-jit from the round's reduced stats
+    (:func:`repro.core.gradestc.next_candidate_count_jax` -- the paper's
+    exact rule, no power-of-two bucketing).  One compiled program therefore
+    serves init, steady-state, and mixed partial-participation rounds: an
+    uninitialized layer (``M = 0``, init flag False) takes the same path
+    with ``R_old = -inf`` and a full-capacity sketch, which is bit-identical
+    to the dedicated init round.
 
-    * ``"init"``   -- every selected client uninitialized (round 0).
-    * ``"update"`` -- every selected client initialized (the steady state).
-    * ``"mixed"``  -- stragglers under partial participation; keeps the
-      ``lax.cond`` (a vmapped cond lowers to a select that executes both
-      branches, i.e. a full extra rSVD -- affordable only on mixed rounds).
-
-    Stats per client: ``[max d_r over updating layers, #layers on the init
-    branch... (as n_upd = #updating layers), sum d_r]`` -- reduced across
-    clients to ``[drmax, n_upd, sum_dr]``, from which the host rebuilds
-    Formula 14 in exact integer arithmetic.
+    Stats per client: ``[max d_r over updating layers, n_upd = #updating
+    layers, sum d_r, d used this round]`` -- reduced across clients to
+    ``[drmax, n_upd, sum_dr, d]``, from which the host rebuilds Formula 14
+    in exact integer arithmetic (inits are the ``n_sel*stack - n_upd``
+    complement) and the ``sum_d`` compute proxy.
     """
 
-    client_stats_len = 3
-    stats_len = 3
+    client_stats_len = 4
+    stats_len = 4
 
     def __init__(self, plan: LayerPlan, seed: int = 0, path_idx: int = 0,
                  variant: str = "full", alpha: float = 1.3, beta: float = 1.0,
@@ -396,14 +394,6 @@ class GradESTCCodec(_MatrixCodec):
         self.use_pallas = bool(use_pallas)
         self.pallas_interpret = pallas_interpret
 
-    @property
-    def has_init_branch(self) -> bool:           # "all" re-inits every round
-        return self.variant != "all"
-
-    @property
-    def dynamic_static(self) -> bool:            # Formula 13 moves d buckets
-        return self.variant == "full"
-
     def init_client_state(self, n_clients: int, client_ids=None):
         plan = self.plan
         L, l, k = plan.stack, plan.l, plan.k
@@ -415,48 +405,50 @@ class GradESTCCodec(_MatrixCodec):
             jnp.zeros((n_clients, L), jnp.bool_),
         )
 
-    def _layer_step(self, d: int, mode: str):
+    def init_shared_state(self):
+        """The traced per-group Formula-13 candidate count ``d``."""
         k = self.plan.k
+        d0 = k if self.variant == "k" else max(1, k // 4)
+        return jnp.asarray(d0, jnp.int32)
+
+    def _round_d(self, shared) -> jnp.ndarray:
+        """The candidate count updating layers use this round (traced).
+
+        Note the deliberate tradeoff for the ``first`` ablation: its frozen
+        basis masks every candidate (d = 0), but the rank-``d_max`` sketch
+        still executes -- XLA cannot dead-code it behind a traced mask, and
+        skipping it would need a per-round init/steady branch, the exact
+        machinery the branch-free contract retired.  Its *uplink* numbers
+        (what Table IV compares) and its ``sum_d`` compute proxy are
+        unaffected; only ablation wall-clock pays."""
+        if self.variant == "first":      # frozen basis: nothing ever enters
+            return jnp.zeros((), jnp.int32)
+        if self.variant == "k":          # fixed d = k ablation
+            return jnp.asarray(self.plan.k, jnp.int32)
+        return jnp.asarray(shared, jnp.int32)
+
+    def encode(self, cstate, shared, key, wire):
+        plan = self.plan
+        M, keys, inited = cstate
+        d = self._round_d(shared)
+        if self.variant == "all":        # re-initialize every round
+            inited = jnp.zeros_like(inited)
         # Decode (Ghat = M A) takes the same use_pallas switch as encode:
         # server-side reconstruction and the downlink decode path both run
         # through the blocked Pallas decode kernel (interpret off-TPU).
         recon = functools.partial(ge.reconstruct, use_pallas=self.use_pallas,
                                   pallas_interpret=self.pallas_interpret)
 
-        def _init(st, G):
-            st2, payload, stats = ge.compress_init(st, G, k=k)
-            return (st2.M, st2.key, recon(st2.M, payload.coeffs),
-                    stats.d_r, jnp.ones((), jnp.bool_))
-
-        def _update(st, G):
-            st2, payload, stats = ge.compress_update(
-                st, G, k=k, d=d, use_pallas=self.use_pallas,
+        def step(M_l, key_l, init_l, G):
+            st = ge.CompressorState(M=M_l, key=key_l, initialized=init_l)
+            st2, payload, stats = ge.compress_step(
+                st, G, k=plan.k, d=d, d_max=plan.d_max,
+                use_pallas=self.use_pallas,
                 pallas_interpret=self.pallas_interpret,
             )
             return (st2.M, st2.key, recon(st2.M, payload.coeffs),
-                    stats.d_r, jnp.zeros((), jnp.bool_))
+                    stats.d_r, payload.init)
 
-        def _project(st, G):
-            # GradESTC-first ablation: frozen basis, coefficients only.
-            A = st.M.T @ G
-            return (st.M, st.key, recon(st.M, A),
-                    jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_))
-
-        steady = _project if self.variant == "first" else _update
-
-        def step(M, key, initialized, G):
-            st = ge.CompressorState(M=M, key=key, initialized=initialized)
-            if self.variant == "all" or mode == "init":
-                return _init(st, G)
-            if mode == "update":
-                return steady(st, G)
-            return jax.lax.cond(initialized, steady, _init, st, G)
-
-        return step
-
-    def encode(self, cstate, shared, key, wire, static, mode):
-        M, keys, inited = cstate
-        step = self._layer_step(static, mode)
         M2, K2, Ghat, d_r, was_init = jax.vmap(step)(M, keys, inited, wire)
         # d_r on update branches only; inits (d_r == k) are reported via the
         # n_upd count instead, so the host can reconstruct Formula 14 in
@@ -466,26 +458,28 @@ class GradESTCCodec(_MatrixCodec):
             jnp.max(upd_dr),
             jnp.sum(~was_init).astype(jnp.int32),
             jnp.sum(upd_dr),
+            d,
         ])
-        return (M2, K2, jnp.ones_like(inited)), Ghat, stats
+        return ((M2, K2, jnp.ones((M2.shape[0],), jnp.bool_)), Ghat, stats)
 
     def reduce_stats(self, stats):
         return jnp.stack([
             jnp.max(stats[:, 0]), jnp.sum(stats[:, 1]), jnp.sum(stats[:, 2]),
+            jnp.max(stats[:, 3]),
         ]).astype(jnp.int32)
 
-    def init_static(self):
-        k = self.plan.k
-        return k if self.variant == "k" else max(1, k // 4)
+    def update_shared(self, shared, reduced_stats, mean_wire):
+        if self.variant != "full":       # d fixed for the ablations
+            return shared
+        drmax, n_upd = reduced_stats[0], reduced_stats[1]
+        d2 = ge.next_candidate_count_jax(drmax, self.plan.k,
+                                         self.alpha, self.beta)
+        # init-only rounds (n_upd == 0) carry d forward unchanged, matching
+        # the old host rule -- a round with no updating layer has no d_r.
+        return jnp.where(n_upd > 0, d2,
+                         jnp.asarray(shared, jnp.int32)).astype(jnp.int32)
 
-    def next_static(self, reduced, static):
-        drmax, n_upd = int(reduced[0]), int(reduced[1])
-        if self.variant == "full" and n_upd > 0:
-            return ge.next_candidate_count(drmax, self.plan.k,
-                                           self.alpha, self.beta)
-        return static
-
-    def charge_bits(self, reduced, n_sel, static):
+    def charge_bits(self, reduced, n_sel):
         plan = self.plan
         n_upd, sum_dr = int(reduced[1]), int(reduced[2])
         n_init = n_sel * plan.stack - n_upd
@@ -495,14 +489,15 @@ class GradESTCCodec(_MatrixCodec):
                      + n_upd * plan.k * plan.m
                      + sum_dr * (plan.l + 1))
 
-    def host_metrics(self, reduced, n_sel, static):
+    def host_metrics(self, reduced, n_sel):
         # Computational-overhead proxy (Table IV): every init pays a rank-k
-        # sketch, every update a rank-d sketch (d only spent for full / k).
+        # sketch, every update a rank-d sketch (d only spent for full / k;
+        # the round's d travels in the stats -- reduced[3]).
         n_upd = int(reduced[1])
         n_init = n_sel * self.plan.stack - n_upd
         inc = self.plan.k * n_init
         if self.variant in ("full", "k"):
-            inc += int(static) * n_upd
+            inc += int(reduced[3]) * n_upd
         return {"sum_d": inc}
 
 
@@ -518,14 +513,6 @@ class EFCodec(Codec):
         self.client_stats_len = inner.client_stats_len
         self.stats_len = inner.stats_len
 
-    @property
-    def has_init_branch(self) -> bool:
-        return self.inner.has_init_branch
-
-    @property
-    def dynamic_static(self) -> bool:
-        return self.inner.dynamic_static
-
     def init_client_state(self, n_clients: int, client_ids=None):
         return (self.inner.init_client_state(n_clients, client_ids),
                 jnp.zeros((n_clients,) + self.mem_shape, jnp.float32))
@@ -539,11 +526,11 @@ class EFCodec(Codec):
     def from_wire(self, wire, shape):
         return self.inner.from_wire(wire, shape)
 
-    def encode(self, cstate, shared, key, wire, static, mode):
+    def encode(self, cstate, shared, key, wire):
         inner_st, mem = cstate
         injected = wire + mem
         inner_st2, recon, stats = self.inner.encode(
-            inner_st, shared, key, injected, static, mode)
+            inner_st, shared, key, injected)
         return (inner_st2, injected - recon), recon, stats
 
     def reduce_stats(self, stats):
@@ -552,14 +539,8 @@ class EFCodec(Codec):
     def update_shared(self, shared, reduced_stats, mean_wire):
         return self.inner.update_shared(shared, reduced_stats, mean_wire)
 
-    def init_static(self):
-        return self.inner.init_static()
+    def charge_bits(self, reduced, n_sel):
+        return self.inner.charge_bits(reduced, n_sel)
 
-    def next_static(self, reduced, static):
-        return self.inner.next_static(reduced, static)
-
-    def charge_bits(self, reduced, n_sel, static):
-        return self.inner.charge_bits(reduced, n_sel, static)
-
-    def host_metrics(self, reduced, n_sel, static):
-        return self.inner.host_metrics(reduced, n_sel, static)
+    def host_metrics(self, reduced, n_sel):
+        return self.inner.host_metrics(reduced, n_sel)

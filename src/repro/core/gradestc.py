@@ -7,11 +7,16 @@ per compressed layer group; its state is the orthonormal basis ``M`` shared
 Key departures from the PyTorch pseudocode, required by XLA (documented in
 DESIGN.md "Assumptions changed"):
 
-* The number of SVD candidates ``d`` is a **static** argument of the jitted
-  step.  The paper's dynamic rule ``d* = min(alpha*d_r + beta, k)``
-  (Formula 13) runs in the host round loop on the concrete ``d_r`` statistic
-  and re-buckets ``d`` to bounded set of values to limit recompilation
-  (see :func:`next_candidate_count`).
+* The number of SVD candidates ``d`` is a **traced** value over rank-padded
+  buffers (:func:`compress_step`): the rSVD sketch always runs at the static
+  capacity ``d_max`` (= k, the Formula-13 clamp) and candidates beyond the
+  traced ``d`` are masked out of the top-k scoring, so the paper's dynamic
+  rule ``d* = min(alpha*d_r + beta, k)`` runs *in-jit*
+  (:func:`next_candidate_count_jax`) with no recompilation when ``d`` moves
+  between rounds.  The legacy static-``d`` entry points
+  (:func:`compress_update`, host-side :func:`next_candidate_count` with its
+  power-of-two buckets) are kept as the reference semantics the padded step
+  is property-tested against.
 
 * The wire payload uses a fixed-capacity buffer of ``d`` replacement vectors
   with a validity count ``d_r``; byte accounting (``metrics.py``) charges only
@@ -46,11 +51,13 @@ __all__ = [
     "init_compressor",
     "compress_init",
     "compress_update",
+    "compress_step",
     "compress",
     "decompress",
     "apply_payload",
     "reconstruct",
     "next_candidate_count",
+    "next_candidate_count_jax",
     "payload_scalars",
 ]
 
@@ -203,6 +210,104 @@ def compress_update(
     return new_state, payload, _stats(G, M_new @ A_new, d_r)
 
 
+def compress_step(
+    state: CompressorState, G: jnp.ndarray, *, k: int, d,
+    d_max: int | None = None,
+    use_pallas: bool = False, pallas_interpret: bool | None = None,
+) -> Tuple[CompressorState, Payload, CompressStats]:
+    """Branch-free rank-padded compression step with a **traced** ``d``.
+
+    One code path serves every round: the rSVD sketch always runs at the
+    static capacity ``d_max`` (default ``k`` -- Formula 13's clamp, so the
+    padded buffers cover every reachable ``d``), and candidates at index
+    ``>= d`` are masked out of the top-k scoring with a ``-inf`` score, which
+    reproduces the static-``d`` replacement rule exactly (the masked
+    candidates can never enter, and ties/ordering among the first ``d`` are
+    untouched -- ``tests/test_round_engine.py`` pins this for every
+    ``d in [0, d_max]``).
+
+    The initialization round is the *same* path: an uninitialized state
+    carries ``M = 0``, so ``A = 0``, ``E = G`` exactly, and forcing
+    ``R_old = -inf`` / ``d_eff = d_max`` makes all ``k`` rSVD vectors of G
+    enter -- bit-identical to :func:`compress_init` when ``d_max == k``.
+    This is what lets a K-round ``lax.scan`` body run init, steady-state,
+    and mixed partial-participation rounds without a static ``mode`` or a
+    vmapped ``lax.cond`` (which would execute both branches anyway).
+
+    ``payload.new_vectors`` is the fixed ``(d_max, l)`` wire buffer; entries
+    beyond ``d_r`` are zero and byte accounting charges only the ``d_r``
+    valid ones (Formula 14), so the rank padding never touches the ledger.
+    """
+    l, m = G.shape
+    d_max = k if d_max is None else d_max
+    key, sub = jax.random.split(state.key)
+    init = ~state.initialized                       # () bool, may be traced
+    # An initializing layer projects against the zero basis, so A = 0 and
+    # E = G *exactly* -- a fresh client state already carries M = 0, and
+    # masking here extends the same guarantee to forced re-inits (the
+    # GradESTC-all ablation) whose carried basis is non-zero.
+    M = jnp.where(init, jnp.zeros_like(state.M), state.M)
+
+    # --- spatial projection onto the carried-over basis -------------------
+    if use_pallas:
+        from repro.kernels.ops import encode
+
+        A, E = encode(M, G, interpret=pallas_interpret)  # Formulas 4 + 6 fused
+    else:
+        A = M.T @ G                                  # (k, m)   Formula 4
+        E = G - M @ A                                # (l, m)   Formula 6
+
+    # --- rank-padded candidates: always sketch at d_max, mask the tail ----
+    d_eff = jnp.where(init, d_max, d).astype(jnp.int32)
+    Ue, Se, Vte = randomized_svd(sub, E, rank=d_max)
+    Me = Ue                                          # (l, d_max)
+    Ae = Se[:, None] * Vte                           # (d_max, m)
+
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+    R_old = jnp.where(init, neg,
+                      jnp.sum(A.astype(jnp.float32) ** 2, axis=1))   # (k,)
+    valid = jnp.arange(d_max) < d_eff
+    R_new = jnp.where(valid,
+                      jnp.sum(Ae.astype(jnp.float32) ** 2, axis=1), neg)
+    R = jnp.concatenate([R_old, R_new])              # (k + d_max,)
+
+    # membership of the top-k by value, ties broken toward old vectors
+    # (old indices first, jax.lax.top_k is stable on index order; masked
+    # candidates sit at -inf and can never displace a finite old score).
+    _, top_idx = jax.lax.top_k(R, k)
+    in_top = jnp.zeros((k + d_max,), jnp.bool_).at[top_idx].set(True)
+
+    replaced = ~in_top[:k]                           # (k,) old columns leaving
+    entering = in_top[k:]                            # (d_max,) cands entering
+    d_r = jnp.sum(entering).astype(jnp.int32)
+
+    # Pair the i-th replaced slot with the i-th entering candidate.
+    repl_rank = jnp.cumsum(replaced.astype(jnp.int32)) - 1          # (k,)
+    enter_order = jnp.argsort(~entering, stable=True)               # (d_max,)
+    src = enter_order[jnp.clip(repl_rank, 0, d_max - 1)]            # (k,)
+
+    M_new = jnp.where(replaced[None, :], Me[:, src], M)             # (l, k)
+    A_new = jnp.where(replaced[:, None], Ae[src, :], A)             # (k, m)
+
+    # Wire buffer: entering vectors packed in rank order, zero padded.
+    enter_rank = jnp.cumsum(entering.astype(jnp.int32)) - 1
+    buf = jnp.zeros((d_max, l), M.dtype)
+    buf = buf.at[jnp.where(entering, enter_rank, d_max)].set(
+        Me.T, mode="drop"
+    )
+
+    payload = Payload(
+        replaced_mask=replaced,
+        new_vectors=buf,
+        coeffs=A_new,
+        d_r=d_r,
+        init=init,
+    )
+    new_state = CompressorState(M=M_new, key=key,
+                                initialized=jnp.ones((), jnp.bool_))
+    return new_state, payload, _stats(G, M_new @ A_new, d_r)
+
+
 def compress(
     state: CompressorState, G: jnp.ndarray, *, k: int, d: int,
     use_pallas: bool = False, pallas_interpret: bool | None = None,
@@ -281,6 +386,20 @@ def reconstruct(
 
         return decode(M, A, interpret=pallas_interpret)
     return M @ A
+
+
+def next_candidate_count_jax(d_r, k: int, alpha: float = 1.3,
+                             beta: float = 1.0) -> jnp.ndarray:
+    """Formula 13 as traced int32 arithmetic: ``d* = min(ceil(alpha*d_r +
+    beta), k)``, clamped to at least 1.
+
+    No power-of-two bucketing: the rank-padded step (:func:`compress_step`)
+    keeps every buffer at ``d_max``, so a moving ``d`` no longer recompiles
+    anything -- the paper's exact rule runs in-jit every round (the host
+    :func:`next_candidate_count` with its buckets remains only for the
+    legacy static-``d`` path)."""
+    d = jnp.ceil(alpha * jnp.asarray(d_r, jnp.float32) + beta)
+    return jnp.clip(d.astype(jnp.int32), 1, k)
 
 
 def next_candidate_count(

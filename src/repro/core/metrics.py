@@ -4,10 +4,13 @@ The paper's headline numbers (Table III) are uplink GB at a target accuracy
 and total uplink GB.  This module provides a tiny ledger used by the FL
 runtime and the benchmarks so every method is charged identically:
 
-  * payload scalars are converted at ``bytes_per_scalar`` (4 for fp32 wire
-    format, 2 for bf16) -- sub-word codes (quantization, signs) report
-    fractional scalars;
-  * per-round, per-client, per-layer-group resolution;
+  * totals accumulate as **exact integer bits** (``charge_uplink_bits`` /
+    ``charge_downlink_bits`` -- the codecs' ``charge_bits`` contract), so
+    no float rounding can skew Table III totals at any scale; sub-word
+    codes (quantization, signs) are integral in bits even when fractional
+    in scalars.  The byte-valued views (``uplink_total`` & co.) divide by 8
+    on read -- dyadic rationals, exact in f64;
+  * per-round and per-group resolution;
   * uplink  = client -> server (gradient direction);
     downlink = server -> client (model broadcast), counted once per round as
     the full model unless downlink compression is enabled.
@@ -57,43 +60,59 @@ def bytes_h(b: float) -> str:
 
 @dataclass
 class CommLedger:
-    bytes_per_scalar: float = 4.0
-    uplink_total: float = 0.0
-    downlink_total: float = 0.0
-    per_round_uplink: List[float] = field(default_factory=list)
-    per_group: Dict[str, float] = field(default_factory=dict)
+    uplink_bits: int = 0
+    downlink_bits: int = 0
+    per_round_uplink_bits: List[int] = field(default_factory=list)
+    per_group_bits: Dict[str, int] = field(default_factory=dict)
 
     def begin_round(self) -> None:
-        self.per_round_uplink.append(0.0)
+        self.per_round_uplink_bits.append(0)
 
-    def charge_uplink(self, scalars: float, group: str = "_",
-                      round_idx: int | None = None) -> None:
-        """Charge ``scalars`` of uplink.  ``round_idx`` pins the charge to an
-        explicit round slot -- required by the pipelined fused engine, which
-        defers the stats fetch for round r until after round r+1 has begun
-        (so "the last slot" is no longer round r's slot)."""
-        b = float(scalars) * self.bytes_per_scalar
-        self.uplink_total += b
+    def charge_uplink_bits(self, bits: int, group: str = "_",
+                           round_idx: int | None = None) -> None:
+        """Charge exact integer ``bits`` of uplink.  ``round_idx`` pins the
+        charge to an explicit round slot -- required by the chunked fused
+        engine, which consumes a whole K-round stats block after round
+        ``start+K-1`` has begun (so "the last slot" is not round r's)."""
+        bits = int(bits)
+        self.uplink_bits += bits
         if round_idx is not None:
-            if not 0 <= round_idx < len(self.per_round_uplink):
+            if not 0 <= round_idx < len(self.per_round_uplink_bits):
                 raise IndexError(
                     f"charge_uplink round_idx={round_idx} but only "
-                    f"{len(self.per_round_uplink)} rounds begun")
-            self.per_round_uplink[round_idx] += b
-        elif self.per_round_uplink:
-            self.per_round_uplink[-1] += b
-        self.per_group[group] = self.per_group.get(group, 0.0) + b
+                    f"{len(self.per_round_uplink_bits)} rounds begun")
+            self.per_round_uplink_bits[round_idx] += bits
+        elif self.per_round_uplink_bits:
+            self.per_round_uplink_bits[-1] += bits
+        self.per_group_bits[group] = self.per_group_bits.get(group, 0) + bits
 
-    def charge_downlink(self, scalars: float) -> None:
-        self.downlink_total += float(scalars) * self.bytes_per_scalar
+    def charge_downlink_bits(self, bits: int) -> None:
+        self.downlink_bits += int(bits)
+
+    # -- byte-valued views (exact: bits are integers, /8 is dyadic) --------
+    @property
+    def uplink_total(self) -> float:
+        return self.uplink_bits / 8
+
+    @property
+    def downlink_total(self) -> float:
+        return self.downlink_bits / 8
+
+    @property
+    def per_round_uplink(self) -> List[float]:
+        return [b / 8 for b in self.per_round_uplink_bits]
+
+    @property
+    def per_group(self) -> Dict[str, float]:
+        return {g: b / 8 for g, b in self.per_group_bits.items()}
 
     @property
     def rounds(self) -> int:
-        return len(self.per_round_uplink)
+        return len(self.per_round_uplink_bits)
 
     def uplink_at(self, round_idx: int) -> float:
         """Cumulative uplink bytes through round ``round_idx`` (inclusive)."""
-        return sum(self.per_round_uplink[: round_idx + 1])
+        return sum(self.per_round_uplink_bits[: round_idx + 1]) / 8
 
     def summary(self) -> str:
         lines = [

@@ -44,6 +44,16 @@ class LayerPlan:
         return int(np.prod(self.shape))
 
     @property
+    def d_max(self) -> int:
+        """Static capacity of the rank-padded dynamic-``d`` buffers: Formula
+        13 clamps ``d* = min(ceil(alpha*d_r + beta), k)``, so ``k`` covers
+        every reachable candidate count.  All per-round payload/state for
+        this group is allocated at ``d_max`` and masked by the traced per-
+        round ``d_r`` (``core/gradestc.compress_step``) -- this is what keeps
+        the round program's shapes static while ``d`` moves."""
+        return self.k
+
+    @property
     def raw_scalars(self) -> int:
         return self.n * self.stack
 

@@ -2,13 +2,14 @@
 
   * compression -- method shells over the stateless codec protocol
                    (``repro.core.codecs``) + the shared RoundAccountant
-                   (exact integer-bit charging, Formula-13 statics)
+                   (exact integer-bit charging from packed stats rows)
   * simulation  -- benchmark-scale round runtime with exact byte accounting
                    (entry point; dispatches between the two engines)
-  * engine      -- fused client-parallel round, generic over any codec:
-                   one jitted XLA program per round (uplink + downlink),
-                   one host sync; optionally sharded over a device mesh
-                   with a pipelined host loop (DESIGN.md Secs. 8 + 10)
+  * engine      -- K-round scan-fused client-parallel engine, generic over
+                   any codec: one jitted XLA program and one host sync per
+                   chunk of ``scan_rounds`` rounds (uplink + downlink,
+                   in-jit selection and Formula 13); optionally sharded
+                   over a device mesh (DESIGN.md Secs. 8-11)
 
 The production SPMD round step (clients = mesh data-axis groups, compressed
 all-gather aggregation) lives in ``repro.launch``.

@@ -11,11 +11,13 @@ Python dicts keyed by ``(client, path)``, which is why only GradESTC could
 run fused before.)
 
 :class:`RoundAccountant` is the host half of the protocol, shared by both
-engines: it consumes the one packed int32 stats vector a round produces,
-charges the ledger in exact integer-bit arithmetic, and advances each
-codec's per-round static config (GradESTC's Formula 13 candidate count,
-for uplink and downlink codecs alike).  Byte parity between the engines is
-by construction -- there is exactly one charging code path.
+engines: it consumes the packed int32 stats vector a round produces (one
+row of the K-round stats block the scan engine fetches per chunk) and
+charges the ledger in exact integer-bit arithmetic.  There is no host-side
+per-round codec config left to advance -- GradESTC's Formula 13 candidate
+count is traced shared state updated in-jit, and the ``d`` a round used
+travels in its stats row.  Byte parity between the engines is by
+construction -- there is exactly one charging code path.
 """
 
 from __future__ import annotations
@@ -246,11 +248,13 @@ def pack_round_stats(reds: Dict[str, jnp.ndarray],
 class RoundAccountant:
     """Host half of the codec protocol, shared verbatim by both engines.
 
-    Consumes the round's packed int32 stats vector (the single measured
-    ``host_fetch``), charges uplink/downlink in exact integer bits, merges
-    host metrics (``sum_d``), and advances each codec's static config
-    (Formula 13).  ``static_args()`` yields the hashable maps the fused
-    engine passes as jit-static arguments.
+    Consumes one round's packed int32 stats row (rows of the single
+    measured per-chunk ``host_fetch`` in the scan engine; one fetch per
+    round in the reference loop), charges uplink/downlink in exact integer
+    bits (``CommLedger.charge_uplink_bits``), and merges host metrics
+    (``sum_d``).  Pure per-row: it carries no per-round state, so rows may
+    be consumed late (the engine defers a chunk's fetch one chunk) as long
+    as ``round_idx`` pins each charge to its slot.
     """
 
     def __init__(self, codecs: Dict[str, Codec], dl_codecs: Dict[str, Codec],
@@ -260,8 +264,6 @@ class RoundAccountant:
         self.dl_codecs = {p: dl_codecs[p] for p in sorted(dl_codecs)}
         self.n_sel = n_sel
         self.downlink_enabled = downlink_enabled
-        self.statics = {p: c.init_static() for p, c in self.codecs.items()}
-        self.dl_statics = {p: c.init_static() for p, c in self.dl_codecs.items()}
         self.metrics: Dict[str, int] = {}
         self.raw_scalars_per_client = sum(
             policy.plans[p].raw_scalars for p in group_paths if p not in codecs
@@ -276,22 +278,8 @@ class RoundAccountant:
         self.packed_len = (sum(c.stats_len for c in self.codecs.values())
                            + sum(c.stats_len for c in self.dl_codecs.values()))
 
-    def static_args(self):
-        """(uplink_static_map, downlink_static_map) as hashable tuples."""
-        return (tuple(sorted(self.statics.items())),
-                tuple(sorted(self.dl_statics.items())))
-
-    @property
-    def has_dynamic_statics(self) -> bool:
-        """True when ``next_static`` can move any codec's static config
-        between rounds (GradESTC's Formula 13 d buckets).  The pipelined
-        fused engine dispatches round r+1 before consuming round r's stats;
-        only dynamic-static codecs can make that speculation miss."""
-        return any(c.dynamic_static for c in self.codecs.values()) or any(
-            c.dynamic_static for c in self.dl_codecs.values())
-
     def consume(self, packed: np.ndarray, ledger, rnd: int) -> None:
-        """Charge the ledger from the fetched stats and advance statics."""
+        """Charge the ledger for round ``rnd`` from its fetched stats row."""
         packed = np.asarray(packed).reshape(-1)
         expected = max(self.packed_len, 1)    # pack_round_stats placeholder
         if packed.size != expected:
@@ -304,24 +292,20 @@ class RoundAccountant:
         for path, codec in self.codecs.items():
             red = packed[off: off + codec.stats_len]
             off += codec.stats_len
-            st = self.statics[path]
-            bits += codec.charge_bits(red, self.n_sel, st)
-            for k, v in codec.host_metrics(red, self.n_sel, st).items():
+            bits += codec.charge_bits(red, self.n_sel)
+            for k, v in codec.host_metrics(red, self.n_sel).items():
                 self.metrics[k] = self.metrics.get(k, 0) + v
-            self.statics[path] = codec.next_static(red, st)
         # round_idx pins the charge to round ``rnd``'s ledger slot: the
-        # pipelined engine has usually already begun round rnd+1 by the time
-        # round rnd's stats arrive.
-        ledger.charge_uplink(bits / 32.0, group=f"round{rnd}", round_idx=rnd)
+        # chunked engine has usually begun the next chunk by the time round
+        # rnd's stats arrive.
+        ledger.charge_uplink_bits(bits, group=f"round{rnd}", round_idx=rnd)
 
         if self.downlink_enabled:
             dbits = 32 * self.dl_raw_scalars
             for path, codec in self.dl_codecs.items():
                 red = packed[off: off + codec.stats_len]
                 off += codec.stats_len
-                st = self.dl_statics[path]
-                dbits += codec.charge_bits(red, 1, st)
-                self.dl_statics[path] = codec.next_static(red, st)
-            ledger.charge_downlink((dbits / 32.0) * self.n_sel)
+                dbits += codec.charge_bits(red, 1)
+            ledger.charge_downlink_bits(dbits * self.n_sel)
         else:
-            ledger.charge_downlink(self.model_scalars * self.n_sel)
+            ledger.charge_downlink_bits(32 * self.model_scalars * self.n_sel)

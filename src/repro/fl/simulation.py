@@ -11,15 +11,22 @@ generic over the stateless codec protocol (``repro.core.codecs``), so every
 method -- GradESTC, the six Table III baselines, and the optional downlink
 codec -- runs on either engine:
 
-* ``engine="fused"`` (default) -- the client-parallel single-XLA-program
-  round in ``repro/fl/engine.py``: local training vmapped over clients,
-  stacked codec state, in-jit aggregation and downlink compression, one
-  host sync per round.
+* ``engine="fused"`` (default) -- the K-round scan-fused engine in
+  ``repro/fl/engine.py``: one jitted XLA program per chunk of
+  ``scan_rounds`` rounds (a ``lax.scan`` over the branch-free round body),
+  local training vmapped over clients, stacked codec state, in-jit
+  client selection / aggregation / Formula-13 / downlink compression, one
+  packed-stats host sync per chunk.
 * ``engine="loop"``  -- the per-client Python reference loop below, kept as
   the parity oracle (identical math, one dispatch per client per group, but
   the same single packed-stats ``host_fetch`` per round -- byte accounting
   shares ``RoundAccountant`` with the fused engine, so it is exact-integer
   on both).
+
+Client selection is a pure function of ``(seed, round)``
+(:func:`select_round_clients` -- a ``fold_in`` key chain), so the scan
+body derives it in-jit while the host assembles the matching batch blocks
+from the same chain; there is no hidden host RNG state.
 
 The distributed SPMD path (pjit over the production mesh) lives in
 ``repro/launch`` -- this module is the algorithm-fidelity / communication-
@@ -54,7 +61,22 @@ from .compression import (
 )
 
 __all__ = ["FLConfig", "FLResult", "run_fl", "default_tiny_arch",
-           "make_local_train", "make_eval_step", "make_batched_eval"]
+           "make_local_train", "make_eval_step", "make_batched_eval",
+           "select_round_clients"]
+
+
+def select_round_clients(seed: int, rnd, n_clients: int, n_sel: int):
+    """The round's selected client ids, sorted -- a pure function of
+    ``(seed, round)`` via a ``fold_in`` chain.
+
+    ``rnd`` may be a traced int32, so the scan-fused engine derives the
+    selection *inside* the jitted chunk, while the host (batch assembly,
+    reference loop) evaluates the identical chain concretely -- both sides
+    agree by construction, with no ``np.random.Generator`` state to keep in
+    sync."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 0xC11E47), rnd)
+    perm = jax.random.permutation(key, n_clients)
+    return jnp.sort(perm[:n_sel]).astype(jnp.int32)
 
 
 def default_tiny_arch(vocab: int = 256) -> ArchConfig:
@@ -90,10 +112,17 @@ class FLConfig:
     policy_overrides: Dict[str, tuple] = field(default_factory=dict)
     coverage_target: float = 0.90
     min_params: int = 4096           # tiny model -> lower floor than prod
-    #: "fused" = single-XLA-program client-parallel round (engine.py);
-    #: "loop" = per-client reference loop (the parity oracle).  Every
-    #: method, including downlink compression, runs on either engine.
+    #: "fused" = K-round scan chunk engine (engine.py); "loop" = per-client
+    #: reference loop (the parity oracle).  Every method, including
+    #: downlink compression, runs on either engine.
     engine: str = "fused"
+    #: chunk length K of the fused engine: one jitted dispatch and one
+    #: packed-stats host sync cover K rounds (``lax.scan`` inside the
+    #: chunk program).  Chunks never span an eval round, so trajectories
+    #: and the ledger are invariant in K; 1 recovers the per-round fused
+    #: engine.  Shapes depend only on the chunk length, so a run compiles
+    #: once per distinct length (typically {1, K, remainder}).
+    scan_rounds: int = 8
     #: route the compression hot paths through the Pallas kernels -- the
     #: GradESTC A/E projection + reconstruction and the FedPAQ/FedQClip
     #: block quantizer.  None = auto (True on TPU, False elsewhere).
@@ -103,14 +132,6 @@ class FLConfig:
     #: (``launch/mesh.make_fl_mesh``) under ``shard_map``.  None/1 = the
     #: single-device program.  Ledger bytes are identical either way.
     devices: Optional[int] = None
-    #: pipeline the fused engine's host loop: defer the packed-stats fetch
-    #: for round r by one round and dispatch round r+1 with the current
-    #: static map, redispatching only when Formula 13 actually moves a
-    #: d bucket (``FLResult.extra["spec_misses"]`` counts those).
-    speculate: bool = True
-    #: assemble each round's batch block on a background thread,
-    #: double-buffered, ``device_put`` under the batch sharding.
-    prefetch: bool = True
 
 
 @dataclass
@@ -224,8 +245,9 @@ def make_batched_eval(arch: ArchConfig):
 @dataclass
 class _RunSetup:
     """Everything both engines must construct *identically* for parity:
-    model/task/policy, per-client data streams, eval batches, selection rng,
-    and the participation count.  Built in exactly one place."""
+    model/task/policy, per-client data streams, eval batches, and the
+    participation count.  Built in exactly one place.  (Client selection is
+    not here: it is the stateless :func:`select_round_clients` chain.)"""
 
     arch: ArchConfig
     task: Any
@@ -238,7 +260,6 @@ class _RunSetup:
     eval_block: Dict[str, jnp.ndarray]
     eval_fn: Callable
     ledger: CommLedger
-    rng: np.random.Generator
     n_sel: int
 
 
@@ -263,7 +284,6 @@ def _setup_run(cfg: FLConfig) -> _RunSetup:
         group_paths=list(groups.keys()), policy=policy, method=method,
         streams=streams, eval_block=eval_block,
         eval_fn=make_batched_eval(arch), ledger=CommLedger(),
-        rng=np.random.default_rng(cfg.seed),
         n_sel=max(1, int(round(cfg.participation * cfg.n_clients))),
     )
 
@@ -284,7 +304,7 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
     params = su.params
     eval_fn, eval_block = su.eval_fn, su.eval_block
     streams, ledger = su.streams, su.ledger
-    rng, group_paths, n_sel = su.rng, su.group_paths, su.n_sel
+    group_paths, n_sel = su.group_paths, su.n_sel
     policy = su.policy
     C = cfg.n_clients
 
@@ -304,19 +324,17 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
                         c.init_client_state(1, client_ids=[SERVER_CLIENT_ID]))
         for p, c in dl_codecs.items()
     }
+    dl_shared = {p: c.init_shared_state() for p, c in dl_codecs.items()}
     # One jitted encode per group: the reference loop keeps per-client
     # dispatch granularity (that is what it measures) but not per-op
-    # eager overhead.
-    enc = {p: jax.jit(c.encode, static_argnames=("static", "mode"))
-           for p, c in codecs.items()}
+    # eager overhead.  No static arguments: encode is branch-free across
+    # rounds (round-varying config is traced state).
+    enc = {p: jax.jit(c.encode) for p, c in codecs.items()}
     upd_shared = {p: jax.jit(c.update_shared) for p, c in codecs.items()}
-    dl_enc = {p: jax.jit(c.encode, static_argnames=("static", "mode"))
-              for p, c in dl_codecs.items()}
+    dl_enc = {p: jax.jit(c.encode) for p, c in dl_codecs.items()}
+    dl_upd_shared = {p: jax.jit(c.update_shared) for p, c in dl_codecs.items()}
 
     local_train = make_local_train(su.arch, cfg.lr)
-    has_init = {p: c.has_init_branch for p, c in codecs.items()}
-    dl_has_init = any(c.has_init_branch for c in dl_codecs.values())
-    client_inited = np.zeros(C, bool)
 
     res = FLResult([], [], [], [], ledger, 0.0)
     round_wall = []
@@ -324,9 +342,9 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
     for rnd in range(cfg.rounds):
         t_round = time.perf_counter()
         ledger.begin_round()
-        sel = sorted(rng.choice(C, size=n_sel, replace=False))
+        sel = [int(c) for c in
+               np.asarray(select_round_clients(cfg.seed, rnd, C, n_sel))]
         base_key = round_base_key(cfg.seed, rnd)
-        statics, dl_statics = (dict(m) for m in acct.static_args())
 
         raw_acc: Dict[str, jnp.ndarray] = {}
         wire_acc: Dict[str, jnp.ndarray] = {}
@@ -345,18 +363,14 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
                                      else raw_acc[path] + delta)
                     continue
                 wire = codec.to_wire(delta)
-                mode = ("update" if (not has_init[path] or client_inited[c])
-                        else "init")
                 cst = jax.tree.map(lambda x: x[c], cstate[path])
                 ckey = codec.per_client_key(base_key, c)
-                cst2, rw, stats = enc[path](cst, shared[path], ckey, wire,
-                                            static=statics[path], mode=mode)
+                cst2, rw, stats = enc[path](cst, shared[path], ckey, wire)
                 cstate[path] = jax.tree.map(
                     lambda x, u, _c=c: x.at[_c].set(u), cstate[path], cst2)
                 stats_rows[path].append(stats)
                 wire_acc[path] = (rw if path not in wire_acc
                                   else wire_acc[path] + rw)
-            client_inited[c] = True
 
         reds: Dict[str, jnp.ndarray] = {}
         recon_mean: Dict[str, jnp.ndarray] = {}
@@ -375,18 +389,18 @@ def _run_fl_loop(cfg: FLConfig, progress: Optional[Callable[[int, dict], None]] 
         avg = {p: recon_mean[p] * cfg.server_lr for p in group_paths}
 
         dl_reds: Dict[str, jnp.ndarray] = {}
-        dl_mode = "init" if (dl_has_init and rnd == 0) else "update"
         for path in group_paths:
             dlc = dl_codecs.get(path)
             if dlc is None:
                 continue
             wire = dlc.to_wire(avg[path])
-            cst2, rw, stats = dl_enc[path](dl_state[path], (), base_key, wire,
-                                           static=dl_statics[path],
-                                           mode=dl_mode)
+            cst2, rw, stats = dl_enc[path](dl_state[path], dl_shared[path],
+                                           base_key, wire)
             dl_state[path] = cst2
+            red = dlc.reduce_stats(stats[None])
+            dl_shared[path] = dl_upd_shared[path](dl_shared[path], red, rw)
             avg[path] = dlc.from_wire(rw, avg[path].shape).astype(avg[path].dtype)
-            dl_reds[path] = dlc.reduce_stats(stats[None])
+            dl_reds[path] = red
 
         params = _set_groups(params, {p: flat_g[p] + avg[p].astype(flat_g[p].dtype)
                                       for p in group_paths})

@@ -27,7 +27,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["block_quant_pallas", "block_dequant_pallas"]
+__all__ = ["block_quant_pallas", "block_dequant_pallas", "quant_levels"]
+
+
+def quant_levels(bits: int) -> float:
+    """Magnitude of the symmetric signed code book for ``bits``-bit codes:
+    ``2^(bits-1) - 1`` (codes span ``[-levels, levels]``).  The single
+    source of truth shared by the Pallas kernels here and the jnp reference
+    oracles in ``ref.py`` -- quantize and dequantize must agree on it
+    exactly or codes decode at the wrong scale."""
+    return float((1 << (bits - 1)) - 1)
 
 
 def _quant_kernel(levels, g_ref, u_ref, c_ref, s_ref):
@@ -60,7 +69,7 @@ def block_quant_pallas(
     assert n % block == 0
     rows = n // block
     assert rows % block_rows == 0
-    levels = float((1 << (bits - 1)) - 1)
+    levels = quant_levels(bits)
 
     g2 = g.reshape(rows, block)
     u2 = uniforms.reshape(rows, block)
@@ -104,7 +113,7 @@ def block_dequant_pallas(
 ) -> jnp.ndarray:
     n = codes.shape[0]
     rows = n // block
-    levels = float((1 << (bits - 1)) - 1)
+    levels = quant_levels(bits)
     grid = (rows // block_rows,)
     out = pl.pallas_call(
         functools.partial(_dequant_kernel, levels),

@@ -11,6 +11,8 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
+from .quant import quant_levels
+
 __all__ = ["encode_ref", "decode_ref", "block_quant_ref", "block_dequant_ref"]
 
 
@@ -45,7 +47,7 @@ def block_quant_ref(
 
     Returns (codes int8 in [-(2^(bits-1)-1), 2^(bits-1)-1], scales (n/block,)).
     """
-    levels = (1 << (bits - 1)) - 1     # symmetric signed code book
+    levels = quant_levels(bits)        # symmetric signed code book
     gb = g.reshape(-1, block).astype(jnp.float32)
     ub = uniforms.reshape(-1, block).astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(gb), axis=1, keepdims=True), 1e-12)
@@ -59,6 +61,6 @@ def block_quant_ref(
 def block_dequant_ref(
     codes: jnp.ndarray, scales: jnp.ndarray, block: int, bits: int = 8
 ) -> jnp.ndarray:
-    levels = (1 << (bits - 1)) - 1
+    levels = quant_levels(bits)
     cb = codes.reshape(-1, block).astype(jnp.float32)
     return (cb * (scales[:, None] / levels)).reshape(codes.shape)

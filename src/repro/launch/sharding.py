@@ -238,14 +238,16 @@ def client_stacked_specs(plan: MeshPlan, params: Any) -> Any:
 
 
 class FLRoundSpecs:
-    """Axis assignment for one sharded fused FL round (DESIGN.md Sec. 10).
+    """Axis assignment for the sharded fused FL chunk (DESIGN.md Secs.
+    10-11).
 
-    Everything the single-host engine needs to run one round under
-    ``shard_map``: which mesh axes enumerate the selected clients, the
-    batch-block placement (via :func:`batch_specs`), and the specs for the
-    per-selected-client vectors (client ids, padding mask).  Model params,
-    codec shared state, and the persistent per-client state store stay
-    replicated (``P()``); only the *selected-client* axis shards.
+    Everything the single-host engine needs to run a K-round scan chunk
+    under ``shard_map``: which mesh axes enumerate the selected clients
+    and the chunk batch-block placement (via :func:`batch_specs`).  Model
+    params, codec shared state, and the persistent per-client state store
+    stay replicated (``P()``); only the *selected-client* axis shards.
+    Per-round selection ids and padding masks are derived in-jit inside
+    the chunk body, so they need no host-side placement.
     """
 
     def __init__(self, plan: MeshPlan):
@@ -267,8 +269,6 @@ class FLRoundSpecs:
                 "sharded FL round (use make_fl_mesh)")
         #: axis-name argument for collectives (psum / all_gather)
         self.client_axis_name = cl if len(cl) > 1 else cl[0]
-        #: spec for (C_pad,) per-selected-client vectors (sel ids, mask)
-        self.client_vec = P(self.client_axis_name)
         #: replicated spec (params, codec state stores, shared state)
         self.replicated = P()
 
@@ -276,9 +276,14 @@ class FLRoundSpecs:
     def n_shards(self) -> int:
         return self.plan.n_clients     # product of client-axis sizes
 
-    def batch(self, batches) -> Dict[str, P]:
-        """Specs for the (C_pad, steps, B, S) round batch block."""
-        return batch_specs(self.plan, batches, client_axis=True)
+    def batch_chunk(self, batches) -> Dict[str, P]:
+        """Specs for the (K, C_pad, steps, B, S) scan-chunk batch block:
+        the leading scan-round axis is replicated (every shard walks the
+        same K rounds), the client axis shards per :func:`batch_specs`."""
+        per_round = batch_specs(
+            self.plan, {k: v[0] for k, v in batches.items()},
+            client_axis=True)
+        return {k: P(None, *per_round[k]) for k in batches}
 
     def pad_clients(self, n_sel: int) -> int:
         """Selected-client axis padded up to a multiple of the shard count."""
@@ -287,14 +292,12 @@ class FLRoundSpecs:
 
     # -- device placement --------------------------------------------------
 
-    def put_batch(self, batches):
-        """``device_put`` a host batch block under the batch sharding."""
-        specs = self.batch(batches)
+    def put_batch_chunk(self, batches):
+        """``device_put`` a host (K, C_pad, ...) chunk block under the
+        chunk sharding."""
+        specs = self.batch_chunk(batches)
         return {k: jax.device_put(v, named(self.mesh, specs[k]))
                 for k, v in batches.items()}
-
-    def put_client_vec(self, v):
-        return jax.device_put(v, named(self.mesh, self.client_vec))
 
     def put_replicated(self, tree):
         sh = named(self.mesh, P())

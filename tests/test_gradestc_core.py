@@ -141,6 +141,89 @@ class TestDecompressor:
         assert int(np.asarray(payload.replaced_mask).sum()) == d_r
 
 
+def ref_static_slice_update(st, G, *, k, d, d_max):
+    """The exact-``d`` reference for the rank-padded step: the legacy
+    static-``d`` ``compress_update`` with its rSVD widened to ``d_max`` and
+    statically sliced back to ``d`` -- i.e. the same candidate pool the
+    padded step masks, consumed by the original unpadded replacement logic.
+    ``compress_step`` with a *traced* ``d`` must reproduce it exactly."""
+    orig = ge.randomized_svd
+
+    def sliced(key, A, rank, *a, **kw):
+        U, S, Vt = orig(key, A, rank=d_max, *a, **kw)
+        return U[:, :rank], S[:rank], Vt[:rank, :]
+
+    ge.randomized_svd = sliced
+    try:
+        return ge.compress_update(st, G, k=k, d=d)
+    finally:
+        ge.randomized_svd = orig
+
+
+class TestRankPaddedStep:
+    """compress_step: traced-d masking over d_max-padded buffers must equal
+    static-d slicing, and the unified init path must equal compress_init."""
+
+    L, M_, K = 32, 24, 8
+
+    def _states(self, rng, key, drift=0.2):
+        l, m, k = self.L, self.M_, self.K
+        G0, G1 = (jnp.asarray(g, jnp.float32)
+                  for g in _drifting_stream(rng, l, m, k, 2, drift))
+        st0 = ge.init_compressor(l, k, key)
+        st1, _, _ = ge.compress_init(st0, G0, k=k)
+        return st1, G1
+
+    @pytest.mark.parametrize("d", list(range(1, 9)))
+    def test_traced_d_equals_static_slice_for_every_d(self, rng, key, d):
+        k = self.K
+        st1, G1 = self._states(rng, key)
+        st_ref, p_ref, s_ref = ref_static_slice_update(
+            st1, G1, k=k, d=d, d_max=k)
+
+        step = jax.jit(lambda st, G, dd: ge.compress_step(
+            st, G, k=k, d=dd, d_max=k))
+        st_pad, p_pad, s_pad = step(st1, G1, jnp.asarray(d, jnp.int32))
+
+        np.testing.assert_array_equal(np.asarray(st_pad.M),
+                                      np.asarray(st_ref.M))
+        np.testing.assert_array_equal(np.asarray(p_pad.coeffs),
+                                      np.asarray(p_ref.coeffs))
+        np.testing.assert_array_equal(np.asarray(p_pad.replaced_mask),
+                                      np.asarray(p_ref.replaced_mask))
+        assert int(s_pad.d_r) == int(s_ref.d_r)
+        # the (d_max, l) wire buffer: first d rows match the exact-d buffer,
+        # padded rows beyond d are zero and never charged (Formula 14)
+        nv = np.asarray(p_pad.new_vectors)
+        np.testing.assert_array_equal(nv[:d], np.asarray(p_ref.new_vectors))
+        assert np.abs(nv[d:]).max(initial=0.0) == 0.0
+
+    def test_unified_init_path_matches_compress_init(self, rng, key):
+        l, m, k = self.L, self.M_, self.K
+        G = jnp.asarray(rng.normal(size=(l, m)), jnp.float32)
+        st0 = ge.init_compressor(l, k, key)
+        st_a, p_a, s_a = ge.compress_init(st0, G, k=k)
+        # d is ignored on the init path (the sketch runs at full capacity)
+        st_b, p_b, s_b = ge.compress_step(st0, G, k=k,
+                                          d=jnp.asarray(3, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(st_a.M), np.asarray(st_b.M))
+        np.testing.assert_array_equal(np.asarray(p_a.coeffs),
+                                      np.asarray(p_b.coeffs))
+        np.testing.assert_array_equal(np.asarray(st_a.key),
+                                      np.asarray(st_b.key))
+        assert int(s_b.d_r) == k and bool(p_b.init)
+
+    def test_one_compile_serves_every_d(self, rng, key):
+        """The whole point: moving d between rounds retraces nothing."""
+        k = self.K
+        st1, G1 = self._states(rng, key)
+        calls = jax.jit(lambda st, G, dd: ge.compress_step(
+            st, G, k=k, d=dd, d_max=k))
+        for d in (1, 2, 5, 8):
+            calls(st1, G1, jnp.asarray(d, jnp.int32))
+        assert calls._cache_size() == 1
+
+
 class TestDynamicD:
     def test_formula13_bucketed(self):
         assert ge.next_candidate_count(0, 32) == 1
@@ -154,6 +237,15 @@ class TestDynamicD:
             d = ge.next_candidate_count(d_r, 32)
             assert d >= prev or d == 32
             prev = max(prev, d)
+
+    def test_traced_formula13_matches_unbucketed_host_rule(self):
+        """The in-jit rule (what both engines now run every round) is the
+        paper's exact Formula 13 -- the host rule without buckets."""
+        import jax.numpy as jnp
+        for d_r in range(0, 33):
+            d_host = ge.next_candidate_count(d_r, 32, bucket=False)
+            d_jax = int(ge.next_candidate_count_jax(jnp.asarray(d_r), 32))
+            assert d_host == d_jax, d_r
 
 
 class TestPayloadAccounting:

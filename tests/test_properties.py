@@ -87,6 +87,46 @@ class TestCompressionInvariants:
         np.testing.assert_allclose(MtM, np.eye(k), atol=2e-3)
 
 
+class TestRankPaddedDynamicD:
+    """Rank-padded traced-d encode (core/gradestc.compress_step) must equal
+    the exact static-d encode for *every* reachable d -- the contract that
+    lets Formula 13 run in-jit with zero recompiles (DESIGN.md Sec. 11)."""
+
+    @given(seed=st.integers(0, 2**16), k_log=st.integers(1, 3),
+           d_frac=st.floats(0.0, 1.0), drift=st.floats(0.01, 0.5))
+    @settings(**_SETTINGS)
+    def test_padded_step_equals_static_slice(self, seed, k_log, d_frac, drift):
+        from test_gradestc_core import ref_static_slice_update
+
+        k = 2 ** k_log
+        l, m = 8 * k, 6 * k
+        d = max(1, min(k, int(round(d_frac * k))))
+        rng = np.random.default_rng(seed)
+        U = np.linalg.qr(rng.normal(size=(l, k)))[0]
+        G0 = jnp.asarray(U @ rng.normal(size=(k, m)), jnp.float32)
+        U2 = np.linalg.qr(U + drift * rng.normal(size=(l, k)))[0]
+        G1 = jnp.asarray(U2 @ rng.normal(size=(k, m))
+                         + 0.01 * rng.normal(size=(l, m)), jnp.float32)
+
+        st0 = ge.init_compressor(l, k, jax.random.PRNGKey(seed))
+        st1, _, _ = ge.compress_init(st0, G0, k=k)
+        st_ref, p_ref, s_ref = ref_static_slice_update(
+            st1, G1, k=k, d=d, d_max=k)
+        st_pad, p_pad, s_pad = jax.jit(
+            lambda st, G, dd: ge.compress_step(st, G, k=k, d=dd, d_max=k)
+        )(st1, G1, jnp.asarray(d, jnp.int32))
+
+        np.testing.assert_array_equal(np.asarray(st_pad.M),
+                                      np.asarray(st_ref.M))
+        np.testing.assert_array_equal(np.asarray(p_pad.coeffs),
+                                      np.asarray(p_ref.coeffs))
+        assert int(s_pad.d_r) == int(s_ref.d_r)
+        nv = np.asarray(p_pad.new_vectors)
+        np.testing.assert_array_equal(nv[:d], np.asarray(p_ref.new_vectors))
+        if d < k:
+            assert np.abs(nv[d:]).max() == 0.0
+
+
 class TestRSVD:
     @given(seed=st.integers(0, 2**16), k=st.integers(1, 6))
     @settings(**_SETTINGS)

@@ -101,17 +101,27 @@ class TestFusedLoopParity:
         assert fused.ledger.downlink_total < raw.ledger.downlink_total
 
     @pytest.mark.parametrize("method", ["gradestc", "fedpaq", "topk", "svdfed"])
-    def test_single_host_sync_per_round(self, method):
-        """The fused engine's contract: one device->host fetch per round,
-        for every method (any codec that silently fell back to per-value
-        fetches would fail this).  Eval rounds add exactly one measured
-        fetch each -- the stacked-batch eval, not one float() per batch."""
-        rounds = 4
+    def test_single_host_sync_per_chunk(self, method):
+        """The scan engine's contract: one device->host fetch per K-round
+        chunk, for every method (any codec that silently fell back to
+        per-value fetches would fail this).  Eval rounds add exactly one
+        measured fetch each -- the stacked-batch eval, not one float() per
+        batch.  With K=1 this degrades to exactly one fetch per round."""
+        rounds = 6
         metrics.reset_host_sync_count()
         res = run_fl(_cfg(method=method, engine="fused", rounds=rounds,
-                          eval_every=100))
+                          eval_every=100, scan_rounds=4))
         assert res.extra["engine"] == "fused"
-        assert metrics.host_sync_count() == rounds + len(res.eval_rounds)
+        # chunks: (0,1) [round-0 eval], (1,5), (5,6) [final eval]
+        assert res.extra["chunks"] == 3
+        assert metrics.host_sync_count() == (res.extra["chunks"]
+                                             + len(res.eval_rounds))
+
+        metrics.reset_host_sync_count()
+        res1 = run_fl(_cfg(method=method, engine="fused", rounds=rounds,
+                           eval_every=100, scan_rounds=1))
+        assert res1.extra["chunks"] == rounds
+        assert metrics.host_sync_count() == rounds + len(res1.eval_rounds)
 
     def test_loop_obeys_same_sync_budget(self):
         """The reference loop routes byte accounting through the same
@@ -125,22 +135,45 @@ class TestFusedLoopParity:
             assert res.extra["engine"] == "loop"
             assert metrics.host_sync_count() == rounds + len(res.eval_rounds)
 
-    def test_pipeline_knobs_do_not_change_results(self):
-        """Speculative deferred-stats dispatch, buffer donation, and the
-        prefetch thread are pure pipelining: switching them off must not
-        move the trajectory or a single ledger byte."""
-        on = run_fl(_cfg(engine="fused", rounds=5))
-        off = run_fl(_cfg(engine="fused", rounds=5, speculate=False,
-                          prefetch=False))
-        np.testing.assert_allclose(on.eval_loss, off.eval_loss, rtol=0,
-                                   atol=1e-7)
-        assert on.ledger.per_round_uplink == off.ledger.per_round_uplink
-        assert on.ledger.uplink_total == off.ledger.uplink_total
-        # gradestc-full has dynamic statics: the speculative run keeps its
-        # replay inputs (no donation), the blocking run donates.
-        assert on.extra["donated_buffers"] is False
-        assert off.extra["donated_buffers"] is True
-        assert off.extra["spec_misses"] == 0
+    def test_scan_chunking_invariance(self):
+        """The chunk length K is pure dispatch amortization: every K must
+        produce the identical trajectory and the identical ledger, byte for
+        byte (chunks never span an eval round, so the eval cadence is also
+        invariant)."""
+        runs = {k: run_fl(_cfg(engine="fused", rounds=7, scan_rounds=k))
+                for k in (1, 3, 8)}
+        ref = runs[1]
+        for k in (3, 8):
+            np.testing.assert_allclose(runs[k].eval_loss, ref.eval_loss,
+                                       rtol=0, atol=1e-7)
+            assert runs[k].eval_rounds == ref.eval_rounds
+            assert (runs[k].ledger.per_round_uplink
+                    == ref.ledger.per_round_uplink)
+            assert runs[k].ledger.uplink_total == ref.ledger.uplink_total
+            assert runs[k].extra["chunks"] < ref.extra["chunks"]
+
+    def test_no_mid_run_recompiles(self):
+        """The rank-padded traced-d contract, measured two ways: the chunk
+        program compiles exactly once per distinct chunk length, and the
+        jax.monitoring compile-event stream goes silent once every shape
+        has been seen -- Formula 13 moving d between rounds (which used to
+        re-bucket a jit-static arg and redispatch) must not trigger a
+        single extra XLA compile."""
+        from repro.launch.compile_cache import CompileWatcher
+
+        watcher = CompileWatcher.install()
+        mark = watcher.snapshot()
+        # chunks: (0,1), (1,5), (5,9) -- the last repeats shape 4, so by
+        # its dispatch every shape (and the eval program) is compiled.
+        res = run_fl(_cfg(engine="fused", rounds=9, scan_rounds=4,
+                          eval_every=100))
+        assert res.extra["chunk_shapes"] == 2      # {1, 4}
+        if res.extra["chunk_compiles"] >= 0:       # -1 = counter unavailable
+            assert res.extra["chunk_compiles"] == res.extra["chunk_shapes"]
+        spans = res.extra["chunk_spans"]
+        assert len(spans) == 3
+        n_after, _ = watcher.since(mark, t_start=spans[-1][0])
+        assert n_after == 0, "steady-state chunk triggered an XLA compile"
 
     def test_pallas_encode_inside_engine_matches(self):
         """use_pallas routes A/E through the kernel (interpret on CPU) and
@@ -205,8 +238,7 @@ class TestCodecProtocol:
             wire = jax.vmap(codec.to_wire)(delta)
 
             def enc(cs, k, w, _co=codec, _sh=shared):
-                return _co.encode(cs, _sh, k, w,
-                                  static=_co.init_static(), mode="init")
+                return _co.encode(cs, _sh, k, w)
 
             cst2, recon, stats = jax.vmap(enc)(cstate, keys, wire)
             assert recon.shape == wire.shape, codec
@@ -231,8 +263,7 @@ class TestCodecProtocol:
             key = jax.random.PRNGKey(0)
 
             def enc(cs, w_, _co=codec, _sh=shared, _k=key):
-                return _co.encode(cs, _sh, _k, w_,
-                                  static=_co.init_static(), mode="init")
+                return _co.encode(cs, _sh, _k, w_)
 
             jax.eval_shape(jax.vmap(enc, in_axes=(0, 0)), cstate, w)
 

@@ -89,30 +89,32 @@ class TestShardedParity:
         shard = run_fl(_cfg(devices=8, **kw))
         _assert_parity(shard, single)
 
-    def test_speculation_miss_forces_redispatch(self):
-        """GradESTC's Formula 13 moves a d bucket in the warmup rounds, so
-        the deferred-stats pipeline must hit >=1 speculation miss -- and the
-        redispatched rounds must leave the trajectory and ledger identical
-        to the non-speculative path."""
-        spec = run_fl(_cfg(rounds=5, devices=8))
-        nospec = run_fl(_cfg(rounds=5, devices=8, speculate=False))
-        assert spec.extra["speculate"] and not nospec.extra["speculate"]
-        assert spec.extra["spec_misses"] >= 1
-        assert nospec.extra["spec_misses"] == 0
-        _assert_parity(spec, nospec, atol=1e-7)
-        # non-speculative path donates its buffers; speculative gradestc
-        # retains them for the replay
-        assert nospec.extra["donated_buffers"] is True
-        assert spec.extra["donated_buffers"] is False
+    def test_scan_chunks_sharded_parity(self):
+        """The K-round scan chunk under shard_map: same trajectory and
+        ledger as K=1 sharded and as the single-device scan -- and zero
+        mid-run recompiles (one executable per chunk shape)."""
+        single = run_fl(_cfg(rounds=6, scan_rounds=4))
+        shard1 = run_fl(_cfg(rounds=6, devices=8, scan_rounds=1))
+        shardk = run_fl(_cfg(rounds=6, devices=8, scan_rounds=4))
+        # vs single-device: the psum schedules reductions differently ->
+        # float-tolerance; vs K=1 sharded: identical program body -> exact-ish
+        _assert_parity(shardk, single, atol=1e-5)
+        _assert_parity(shardk, shard1, atol=1e-7)
+        assert shardk.extra["chunks"] < shard1.extra["chunks"]
+        if shardk.extra["chunk_compiles"] >= 0:    # -1 = counter unavailable
+            assert (shardk.extra["chunk_compiles"]
+                    == shardk.extra["chunk_shapes"])
 
-    def test_single_host_sync_per_round_sharded(self):
-        """The single-host-sync contract survives shard_map: one packed
-        stats fetch per round (deferred, but still exactly one), plus one
-        fetch per eval round."""
-        rounds = 4
+    def test_single_host_sync_per_chunk_sharded(self):
+        """The per-chunk host-sync contract survives shard_map: one packed
+        stats fetch per K-round chunk, plus one fetch per eval round."""
+        rounds = 6
         metrics.reset_host_sync_count()
-        res = run_fl(_cfg(rounds=rounds, devices=8, eval_every=100))
-        assert metrics.host_sync_count() == rounds + len(res.eval_rounds)
+        res = run_fl(_cfg(rounds=rounds, devices=8, eval_every=100,
+                          scan_rounds=4))
+        assert res.extra["chunks"] == 3       # (0,1), (1,5), (5,6)
+        assert metrics.host_sync_count() == (res.extra["chunks"]
+                                             + len(res.eval_rounds))
 
 
 class TestShardedSubprocessSmoke:
@@ -132,7 +134,7 @@ arch = ArchConfig(name="t", family="dense", n_layers=2, d_model=32,
 kw = dict(method="gradestc", rounds=4, n_clients=6, local_steps=1, batch=2,
           seq=16, eval_every=2, seed=1, arch=arch)
 a = run_fl(FLConfig(engine="fused", **kw))
-b = run_fl(FLConfig(engine="fused", devices=4, **kw))
+b = run_fl(FLConfig(engine="fused", devices=4, scan_rounds=3, **kw))
 np.testing.assert_allclose(b.eval_loss, a.eval_loss, rtol=0, atol=1e-5)
 assert b.ledger.per_round_uplink == a.ledger.per_round_uplink
 assert b.ledger.uplink_total == a.ledger.uplink_total
