@@ -1,12 +1,32 @@
-"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+"""Kernel microbenchmarks: fused wire kernels vs split stages, per backend.
 
-On this CPU container the interesting number is the ORACLE (XLA) path --
-interpret-mode Pallas timing is a Python emulation, reported only for
-completeness.  On TPU the same harness times the compiled kernels.
+Reports bytes/s per kernel over the raw gradient payload (input f32 bytes),
+for three paths:
+
+  oracle_xla        jit'd pure-jnp oracle (ref.py)        -- comparable
+  fused_xla         jit'd fused dispatcher, kernel off    -- comparable
+  split_xla         the same work as two jit'd stages
+                    (quantize, then pack) with a real
+                    dispatch boundary between them        -- comparable
+  pallas_interpret  interpret-mode Pallas (a Python
+                    emulation of the TPU kernel)          -- NOT comparable
+  pallas_tpu        compiled Pallas kernel                -- comparable
+
+Interpret-mode rows carry ``comparable: false`` so downstream tooling never
+reads the emulation as a perf result.  Select paths with ``--backend``:
+``auto`` (default) runs the XLA paths plus pallas_tpu on TPU or
+pallas_interpret elsewhere; ``xla`` / ``interpret`` / ``tpu`` force one.
+
+CLI:  PYTHONPATH=src python -m benchmarks.kernel_micro \
+          [--backend auto|xla|interpret|tpu] [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
 
+import argparse
+import functools
+import json
+import sys
 from typing import Dict, List
 
 import jax
@@ -16,39 +36,181 @@ from repro.kernels import ops, ref
 
 from .common import timer
 
+BACKENDS = ("auto", "xla", "interpret", "tpu")
 
-def run() -> List[Dict]:
-    rows = []
-    key = jax.random.PRNGKey(0)
+
+def _paths(backend: str) -> List[str]:
     on_tpu = jax.default_backend() == "tpu"
-    for (l, k, m) in [(1024, 32, 1024), (4096, 64, 4096)]:
-        M = jnp.linalg.qr(jax.random.normal(key, (l, k)))[0]
-        G = jax.random.normal(key, (l, m))
-        ref_encode = jax.jit(lambda M, G: ref.encode_ref(M, G))
-        us_ref = timer(ref_encode, M, G)
-        row = {
-            "table": "kernel", "kernel": "encode", "shape": f"l{l}_k{k}_m{m}",
-            "us_ref_xla": round(us_ref, 1),
-        }
-        if on_tpu:
-            us_k = timer(lambda M, G: ops.encode(M, G), M, G)
-            row["us_pallas"] = round(us_k, 1)
-        rows.append(row)
+    if backend == "auto":
+        return ["xla", "tpu" if on_tpu else "interpret"]
+    if backend == "tpu" and not on_tpu:
+        raise SystemExit("--backend tpu: no TPU in this process")
+    return [backend]
 
-        A = M.T @ G
-        ref_decode = jax.jit(lambda M, A: ref.decode_ref(M, A))
-        rows.append({
-            "table": "kernel", "kernel": "decode", "shape": f"l{l}_k{k}_m{m}",
-            "us_ref_xla": round(timer(ref_decode, M, A), 1),
-        })
 
-    g = jax.random.normal(key, (1 << 20,))
-    q = jax.jit(lambda g, k: ops.block_quantize(g, k, use_kernel=False))
-    rows.append({
-        "table": "kernel", "kernel": "block_quant_1M", "shape": "n1048576",
-        "us_ref_xla": round(timer(q, g, key), 1),
-    })
+def _row(kernel: str, shape: str, path: str, us: float, nbytes: int,
+         fused: bool) -> Dict:
+    comparable = path != "pallas_interpret"
+    r = {
+        "table": "kernel", "kernel": kernel, "shape": shape, "path": path,
+        "fused": fused, "us": round(us, 1), "bytes": nbytes,
+        "gbps": round(nbytes / us * 1e6 / 1e9, 3) if comparable else None,
+        "comparable": comparable,
+    }
+    return r
+
+
+def _bench_sign(n: int, paths: List[str], rows: List[Dict]) -> None:
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    nbytes = n * 4
+    shape = f"n{n}"
+    if "xla" in paths:
+        fused = jax.jit(lambda g: ops.sign_wire(g, use_kernel=False))
+        rows.append(_row("sign_wire", shape, "fused_xla",
+                         timer(fused, g), nbytes, True))
+        # split: sign bits materialized f32-wide, packed in a second dispatch
+        s1 = jax.jit(lambda g: ((g < 0).astype(jnp.uint32),
+                                ref.mean_abs_ref(g)))
+        s2 = jax.jit(lambda b: ref.pack_codes_ref(b, 1))
+        rows.append(_row("sign_wire", shape, "split_xla",
+                         timer(lambda g: s2(s1(g)[0]), g), nbytes, False))
+    for p in ("interpret", "tpu"):
+        if p in paths:
+            k = jax.jit(functools.partial(ops.sign_wire, use_kernel=True,
+                                          interpret=(p == "interpret")))
+            rows.append(_row("sign_wire", shape, f"pallas_{p}",
+                             timer(k, g), nbytes, True))
+
+
+def _bench_quant(n: int, bits: int, paths: List[str],
+                 rows: List[Dict]) -> None:
+    g = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    key = jax.random.PRNGKey(2)
+    nbytes = n * 4
+    shape = f"n{n}_b{bits}"
+    if "xla" in paths:
+        fused = jax.jit(functools.partial(
+            ops.block_quant_wire, bits=bits, use_kernel=False))
+        rows.append(_row("quant_wire", shape, "fused_xla",
+                         timer(fused, g, key), nbytes, True))
+        s1 = jax.jit(functools.partial(ops.block_quantize, bits=bits,
+                                       use_kernel=False))
+
+        def _split_pack(codes, bits=bits):
+            levels = 2 ** (bits - 1) - 1
+            return ref.pack_codes_ref(
+                (codes.astype(jnp.int32) + levels).astype(jnp.uint32), bits)
+
+        s2 = jax.jit(_split_pack)
+        rows.append(_row("quant_wire", shape, "split_xla",
+                         timer(lambda g, k: s2(s1(g, k)[0]), g, key),
+                         nbytes, False))
+    for p in ("interpret", "tpu"):
+        if p in paths:
+            k = jax.jit(functools.partial(
+                ops.block_quant_wire, bits=bits, use_kernel=True,
+                interpret=(p == "interpret")))
+            rows.append(_row("quant_wire", shape, f"pallas_{p}",
+                             timer(k, g, key), nbytes, True))
+
+
+def _bench_encode_quant(l: int, k: int, m: int, paths: List[str],
+                        rows: List[Dict]) -> None:
+    key = jax.random.PRNGKey(3)
+    M = jnp.linalg.qr(jax.random.normal(key, (l, k)))[0].astype(jnp.float32)
+    G = jax.random.normal(key, (l, m), jnp.float32)
+    nbytes = l * m * 4
+    shape = f"l{l}_k{k}_m{m}"
+    if "xla" in paths:
+        fused = jax.jit(functools.partial(ops.encode_quant,
+                                          use_kernel=False))
+        rows.append(_row("encode_quant", shape, "fused_xla",
+                         timer(fused, M, G), nbytes, True))
+        # split: full-precision A and E materialized, then quantized
+        s1 = jax.jit(lambda M, G: ref.encode_ref(M, G))
+        s2 = jax.jit(ref.coeff_quant_ref)
+        rows.append(_row("encode_quant", shape, "split_xla",
+                         timer(lambda M, G: s2(s1(M, G)[0]), M, G),
+                         nbytes, False))
+    for p in ("interpret", "tpu"):
+        if p in paths:
+            kk = jax.jit(functools.partial(ops.encode_quant, use_kernel=True,
+                                           interpret=(p == "interpret")))
+            rows.append(_row("encode_quant", shape, f"pallas_{p}",
+                             timer(kk, M, G), nbytes, True))
+
+
+def _bench_decode_wire(l: int, k: int, m: int, paths: List[str],
+                       rows: List[Dict]) -> None:
+    key = jax.random.PRNGKey(4)
+    M = jnp.linalg.qr(jax.random.normal(key, (l, k)))[0].astype(jnp.float32)
+    A = jax.random.normal(key, (k, m), jnp.float32)
+    codes, scales, _ = ops.coeff_quant(A, use_kernel=False)
+    nbytes = l * m * 4
+    shape = f"l{l}_k{k}_m{m}"
+    if "xla" in paths:
+        fused = jax.jit(functools.partial(ops.decode_wire, use_kernel=False))
+        rows.append(_row("decode_wire", shape, "fused_xla",
+                         timer(fused, M, codes, scales), nbytes, True))
+        s1 = jax.jit(ref.coeff_dequant_ref)
+        s2 = jax.jit(lambda M, A: ref.decode_ref(M, A))
+        rows.append(_row("decode_wire", shape, "split_xla",
+                         timer(lambda M, c, s: s2(M, s1(c, s)),
+                               M, codes, scales), nbytes, False))
+    for p in ("interpret", "tpu"):
+        if p in paths:
+            kk = jax.jit(functools.partial(ops.decode_wire, use_kernel=True,
+                                           interpret=(p == "interpret")))
+            rows.append(_row("decode_wire", shape, f"pallas_{p}",
+                             timer(kk, M, codes, scales), nbytes, True))
+
+
+def run(backend: str = "auto", smoke: bool = False) -> List[Dict]:
+    paths = _paths(backend)
+    rows: List[Dict] = []
+    n = 1 << 16 if smoke else 1 << 20
+    _bench_sign(n, paths, rows)
+    for bits in ((8,) if smoke else (4, 8)):
+        _bench_quant(n, bits, paths, rows)
+    lkm = (256, 16, 512) if smoke else (1024, 32, 4096)
+    _bench_encode_quant(*lkm, paths, rows)
+    _bench_decode_wire(*lkm, paths, rows)
     return rows
 
 
-HEADER = ["table", "kernel", "shape", "us_ref_xla", "us_pallas"]
+def to_report(rows: List[Dict], backend: str) -> Dict:
+    """BENCH_kernels.json payload: rows plus provenance."""
+    return {
+        "benchmark": "kernel_micro",
+        "backend_arg": backend,
+        "device": jax.default_backend(),
+        "note": ("rows with comparable=false are interpret-mode Pallas "
+                 "(Python emulation) -- correctness probes, never perf"),
+        "results": rows,
+    }
+
+
+HEADER = ["table", "kernel", "shape", "path", "fused", "us", "bytes",
+          "gbps", "comparable"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=BACKENDS, default="auto")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_kernels.json-style report")
+    args = ap.parse_args(argv)
+    rows = run(backend=args.backend, smoke=args.smoke)
+    from .common import emit_csv
+
+    emit_csv(rows, HEADER)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(to_report(rows, args.backend), f, indent=2)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

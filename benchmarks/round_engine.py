@@ -61,6 +61,10 @@ import subprocess
 import sys
 import tempfile
 
+from repro.launch.env import configure_host
+
+configure_host()  # must precede the first jax import (XLA_FLAGS freeze)
+
 import jax
 import numpy as np
 
@@ -108,12 +112,27 @@ def bench_cfg(method: str, engine: str, n_clients: int, *, devices: int = 1,
 
 
 def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
-            scan_rounds: int = 1, rounds: int | None = None) -> dict:
+            scan_rounds: int = 1, rounds: int | None = None,
+            agg_block: int = 1) -> dict:
     # warm until the first chunk of every distinct shape has run: chunk 0
     # (length 1, ends at the round-0 eval point) plus one full K chunk.
     warm = (1 + scan_rounds if engine == "fused" and scan_rounds > 1
             else WARMUP_ROUNDS)
-    total = warm + MEASURED_ROUNDS if rounds is None else rounds
+    # A K-round chunk yields ONE wall sample per K rounds (its mean), so
+    # the scan engine needs K times the rounds for its steady-state median
+    # to cover MEASURED_ROUNDS chunk samples -- with a single post-warmup
+    # chunk the "median" is one noisy draw.  The K=1 fused row it is
+    # compared against must use the *same estimator* (median over means of
+    # ``agg_block`` consecutive rounds): a median over single-round walls
+    # rejects one-sided OS-jitter spikes that the chunk means of the K>1
+    # row necessarily absorb, biasing the scan-amortization ratio low.
+    block = (scan_rounds if engine == "fused" and scan_rounds > 1
+             else max(1, agg_block) if engine == "fused" else 1)
+    # Fused rounds are milliseconds, so double the sample count there; the
+    # loop engine is seconds/round and its ratios are far from 1.0 anyway.
+    measured = (MEASURED_ROUNDS * block * 2 if engine == "fused"
+                else MEASURED_ROUNDS)
+    total = warm + measured if rounds is None else rounds
     warm = min(warm, total - 1)
     cfg = bench_cfg(method, engine, n_clients, devices=devices,
                     scan_rounds=scan_rounds, rounds=total)
@@ -124,7 +143,10 @@ def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
     syncs = metrics.host_sync_count()
     compile_count, compile_s = watcher.since(mark)
     wall = res.extra["round_wall_s"]
-    steady = float(np.median(wall[warm:]))
+    tail = np.asarray(wall[warm:])
+    if block > 1 and tail.size >= block:
+        tail = tail[:(tail.size // block) * block].reshape(-1, block).mean(1)
+    steady = float(np.median(tail))
     spans = res.extra.get("chunk_spans") or []
     first_ms = wall[0] * 1e3
     if spans:      # compile time received during the first chunk's dispatch
@@ -181,9 +203,7 @@ def measure(method: str, engine: str, n_clients: int, *, devices: int = 1,
 def run_child(devices: int, methods, clients: int, rounds: int | None,
               scan: int, out: pathlib.Path) -> dict:
     env = dict(os.environ)
-    flags = env.get("XLA_FLAGS", "")
-    env["XLA_FLAGS"] = (
-        f"{flags} --xla_force_host_platform_device_count={devices}".strip())
+    configure_host(host_device_count=devices, env=env)
     cmd = [sys.executable, str(pathlib.Path(__file__).resolve()), "--child",
            "--devices", str(devices), "--clients", str(clients),
            "--scan", str(scan), "--methods", *methods, "--out", str(out)]
@@ -202,7 +222,8 @@ def child_main(args) -> int:
             results.append(measure(method, "fused", clients,
                                    devices=args.devices,
                                    scan_rounds=scan_rounds,
-                                   rounds=args.rounds))
+                                   rounds=args.rounds,
+                                   agg_block=args.scan))
     pathlib.Path(args.out).write_text(json.dumps(results))
     return 0
 
@@ -308,7 +329,8 @@ def main(argv=None) -> int:
             grid += [(method, C) for C in counts]
         for method, C in grid:
             loop = measure(method, "loop", C)
-            fused = measure(method, "fused", C, scan_rounds=1)
+            fused = measure(method, "fused", C, scan_rounds=1,
+                            agg_block=scan)
             chunk = measure(method, "fused", C, scan_rounds=scan)
             results += [loop, fused, chunk]
             sp = loop["steady_round_ms"] / fused["steady_round_ms"]

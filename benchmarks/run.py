@@ -4,18 +4,24 @@
   table4   Table IV   GradESTC ablation (-first/-all/-k/full/+ef)
   fig1     Figure 1/2 temporal gradient correlation + parameter sizes
   fig9     Figure 9   k sensitivity
-  kernel   --         codec kernel microbenchmarks
+  kernel   --         wire-codec kernel microbenchmarks (BENCH_kernels.json)
   roofline Sec 4/5    dry-run roofline table (reads reports/dryrun.json)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--only table3,fig1] [--rounds N]
+  PYTHONPATH=src python -m benchmarks.run --only kernel --smoke
 
-Prints ``name,...`` CSV blocks per benchmark.
+Prints ``name,...`` CSV blocks per benchmark.  The kernel benchmark also
+writes ``BENCH_kernels.json`` (bytes/s per kernel, fused vs split stages,
+oracle-XLA vs Pallas; interpret-mode rows are flagged non-comparable) so the
+kernel layer has a tracked perf trajectory; ``--smoke`` shrinks shapes for
+CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -25,6 +31,12 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list of {table3,table4,fig1,fig9,kernel,roofline}")
     ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / fast path (kernel benchmark)")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel benchmark backend: auto|xla|interpret|tpu")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json",
+                    metavar="PATH", help="kernel benchmark report path")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
         "table3", "table4", "fig1", "fig9", "kernel", "roofline"}
@@ -51,8 +63,12 @@ def main(argv=None) -> int:
         emit_csv(f9.run(rounds=args.rounds), f9.HEADER)
     if "kernel" in want:
         from . import kernel_micro as km
-        print("# Kernel microbenchmarks", flush=True)
-        emit_csv(km.run(), km.HEADER)
+        print("# Kernel microbenchmarks (wire layer)", flush=True)
+        rows = km.run(backend=args.backend, smoke=args.smoke)
+        emit_csv(rows, km.HEADER)
+        with open(args.kernels_json, "w") as f:
+            json.dump(km.to_report(rows, args.backend), f, indent=2)
+        print(f"# wrote {args.kernels_json}", flush=True)
     if "roofline" in want:
         from . import roofline as rl
         print("# Roofline (from dry-run)", flush=True)

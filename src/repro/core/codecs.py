@@ -240,10 +240,33 @@ class FedPAQCodec(_FlatCodec):
 
 
 class SignSGDCodec(_FlatCodec):
-    """1-bit sign compression with a mean-magnitude scale (ref [20])."""
+    """1-bit sign compression with a mean-magnitude scale (ref [20]).
+
+    ``encode`` materializes the packed 1-bit wire (``kernels.ops.sign_wire``:
+    32 signs per uint32 word + one mean-|g| scale) and reconstructs from it,
+    so the dense bits the ledger charges for actually exist on device.  Wire
+    semantics: bit = (g < 0), so an exact zero ships as +scale (a 1-bit code
+    book has no zero; ``jnp.sign``'s 0 -> 0 is unrepresentable), and the
+    scale uses the canonical two-stage (rows, 512) reduction -- both engines
+    share this codec, so engine parity is untouched.  ``use_pallas`` selects
+    the fused sign-pack kernel (interpret off-TPU) over the jnp oracle;
+    the two are bit-exact.
+    """
+
+    def __init__(self, n: int, path_idx: int = 0, use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None):
+        super().__init__(n, path_idx)
+        self.use_pallas = bool(use_pallas)
+        self.pallas_interpret = pallas_interpret
 
     def encode(self, cstate, shared, key, wire):
-        ghat, _ = bl.sign_compress(wire)
+        from repro.kernels import ops
+
+        words, scale = ops.sign_wire(
+            wire, use_kernel=self.use_pallas, interpret=self.pallas_interpret)
+        ghat = ops.sign_unwire(
+            words, scale, self.n,
+            use_kernel=self.use_pallas, interpret=self.pallas_interpret)
         return (), ghat, jnp.zeros((0,), jnp.int32)
 
     def charge_bits(self, reduced, n_sel):
@@ -289,6 +312,24 @@ class _MatrixCodec(Codec):
         return flat.reshape(shape)
 
 
+#: bits per coefficient entry for each coefficient wire format
+_WIRE_DTYPE_BITS = {"f32": 32, "bf16": 16, "int8": 8}
+
+
+def _coeff_wire_bits(wire_dtype: str, k: int, m: int) -> int:
+    """Exact uplink bits for one (k, m) coefficient matrix on the wire.
+
+    Entries ship at the wire dtype's width; the int8 format additionally
+    ships one f32 scale per (row, 512-column block) (``ref.WIRE_BLOCK``).
+    "f32" reproduces the historical ``32 * k * m`` exactly, so default-config
+    ledgers are bit-for-bit unchanged.
+    """
+    bits = _WIRE_DTYPE_BITS[wire_dtype] * k * m
+    if wire_dtype == "int8":
+        bits += 32 * k * (-(-m // 512))
+    return bits
+
+
 class SVDFedCodec(_MatrixCodec):
     """Globally shared per-group basis (ref [12]), round-granular refits.
 
@@ -309,10 +350,16 @@ class SVDFedCodec(_MatrixCodec):
     stats_len = 2
 
     def __init__(self, plan: LayerPlan, gamma: float = 8.0, seed: int = 0,
-                 path_idx: int = 0):
+                 path_idx: int = 0, use_pallas: bool = False,
+                 pallas_interpret: Optional[bool] = None,
+                 wire_dtype: str = "f32"):
+        assert wire_dtype in ("f32", "bf16", "int8")
         super().__init__(plan, path_idx)
         self.gamma = float(gamma)
         self.seed = int(seed)
+        self.use_pallas = bool(use_pallas)
+        self.pallas_interpret = pallas_interpret
+        self.wire_dtype = wire_dtype
 
     def init_shared_state(self):
         plan = self.plan
@@ -323,10 +370,29 @@ class SVDFedCodec(_MatrixCodec):
 
     def encode(self, cstate, shared, key, wire):
         M, _, refit = shared
-        A = jnp.einsum("xlk,xlm->xkm", M, wire)
-        Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
+        if self.wire_dtype == "int8":
+            # SVDFed's steady state IS project + quantize, so the int8 wire
+            # fuses into one encode_quant kernel pass per layer; the
+            # residual E comes back against the *shipped* coefficients.
+            from repro.kernels import ops
+
+            codes, scales, E = jax.vmap(functools.partial(
+                ops.encode_quant, use_kernel=self.use_pallas,
+                interpret=self.pallas_interpret))(M, wire)
+            Ghat = jax.vmap(functools.partial(
+                ops.decode_wire, use_kernel=self.use_pallas,
+                interpret=self.pallas_interpret))(M, codes, scales)
+            err = jnp.sum(E.astype(jnp.float32) ** 2)
+        else:
+            A = jnp.einsum("xlk,xlm->xkm", M, wire)
+            if self.wire_dtype == "bf16":
+                from repro.kernels import ops
+
+                A = jax.vmap(functools.partial(
+                    ops.coeff_roundtrip, wire_dtype="bf16"))(A)
+            Ghat = jnp.einsum("xlk,xkm->xlm", M, A)
+            err = jnp.sum((wire - Ghat).astype(jnp.float32) ** 2)
         recon = jnp.where(refit, wire, Ghat)
-        err = jnp.sum((wire - Ghat).astype(jnp.float32) ** 2)
         den = jnp.maximum(jnp.sum(wire.astype(jnp.float32) ** 2), 1e-30)
         thresh = (self.gamma / 100.0) ** 2
         want = jnp.logical_and(~refit, err > thresh * den)
@@ -353,7 +419,8 @@ class SVDFedCodec(_MatrixCodec):
         plan = self.plan
         if int(reduced[0]):                       # refit round: raw uplink
             return 32 * plan.raw_scalars * n_sel
-        return 32 * plan.k * plan.m * plan.stack * n_sel
+        bits = _coeff_wire_bits(self.wire_dtype, plan.k, plan.m) * plan.stack
+        return bits * n_sel
 
 
 class GradESTCCodec(_MatrixCodec):
@@ -385,14 +452,19 @@ class GradESTCCodec(_MatrixCodec):
     def __init__(self, plan: LayerPlan, seed: int = 0, path_idx: int = 0,
                  variant: str = "full", alpha: float = 1.3, beta: float = 1.0,
                  use_pallas: bool = False,
-                 pallas_interpret: Optional[bool] = None):
+                 pallas_interpret: Optional[bool] = None,
+                 wire_dtype: str = "f32"):
         assert variant in ("full", "first", "all", "k")
+        assert wire_dtype in ("f32", "bf16", "int8")
         super().__init__(plan, path_idx)
         self.seed = int(seed)
         self.variant = variant
         self.alpha, self.beta = float(alpha), float(beta)
         self.use_pallas = bool(use_pallas)
         self.pallas_interpret = pallas_interpret
+        #: coefficient wire format (basis vectors always ship f32 -- see
+        #: core.gradestc.compress_step)
+        self.wire_dtype = wire_dtype
 
     def init_client_state(self, n_clients: int, client_ids=None):
         plan = self.plan
@@ -445,6 +517,7 @@ class GradESTCCodec(_MatrixCodec):
                 st, G, k=plan.k, d=d, d_max=plan.d_max,
                 use_pallas=self.use_pallas,
                 pallas_interpret=self.pallas_interpret,
+                wire_dtype=self.wire_dtype,
             )
             return (st2.M, st2.key, recon(st2.M, payload.coeffs),
                     stats.d_r, payload.init)
@@ -483,11 +556,14 @@ class GradESTCCodec(_MatrixCodec):
         plan = self.plan
         n_upd, sum_dr = int(reduced[1]), int(reduced[2])
         n_init = n_sel * plan.stack - n_upd
-        # Formula 14: inits ship the basis (k*l) + coefficients; updates
-        # ship coefficients + the d_r entering vectors and their indices.
-        return 32 * (n_init * (plan.k * plan.l + plan.k * plan.m)
-                     + n_upd * plan.k * plan.m
-                     + sum_dr * (plan.l + 1))
+        # Formula 14: inits ship the basis (k*l, always f32) + coefficients;
+        # updates ship coefficients + the d_r entering vectors (f32) and
+        # their indices.  Coefficients ship at the wire dtype's width
+        # (f32 reproduces the historical 32*k*m exactly).
+        coeff = _coeff_wire_bits(self.wire_dtype, plan.k, plan.m)
+        return (n_init * (32 * plan.k * plan.l + coeff)
+                + n_upd * coeff
+                + 32 * sum_dr * (plan.l + 1))
 
     def host_metrics(self, reduced, n_sel):
         # Computational-overhead proxy (Table IV): every init pays a rank-k

@@ -214,6 +214,7 @@ def compress_step(
     state: CompressorState, G: jnp.ndarray, *, k: int, d,
     d_max: int | None = None,
     use_pallas: bool = False, pallas_interpret: bool | None = None,
+    wire_dtype: str = "f32",
 ) -> Tuple[CompressorState, Payload, CompressStats]:
     """Branch-free rank-padded compression step with a **traced** ``d``.
 
@@ -237,6 +238,17 @@ def compress_step(
     ``payload.new_vectors`` is the fixed ``(d_max, l)`` wire buffer; entries
     beyond ``d_r`` are zero and byte accounting charges only the ``d_r``
     valid ones (Formula 14), so the rank padding never touches the ledger.
+
+    ``wire_dtype`` selects the *coefficient* wire format ("f32" exact ship,
+    "bf16" half-word pairs, "int8" per-(row, 512-block)-scaled codes --
+    DESIGN.md "Wire-format layer").  The roundtrip applies to ``A_new``
+    *after* basis replacement -- coefficients pass through the replacement
+    pairing between projection and wire, so unlike SVDFed's steady state the
+    quantization here cannot fuse into the projection kernel.  The shipped
+    value feeds both the payload and the stats, so client and server agree
+    on the reconstruction exactly.  Basis vectors always ship f32: client
+    and server mirror the basis from them, and a lossy basis would drift the
+    two copies apart.
     """
     l, m = G.shape
     d_max = k if d_max is None else d_max
@@ -288,6 +300,12 @@ def compress_step(
 
     M_new = jnp.where(replaced[None, :], Me[:, src], M)             # (l, k)
     A_new = jnp.where(replaced[:, None], Ae[src, :], A)             # (k, m)
+
+    if wire_dtype != "f32":
+        from repro.kernels.ops import coeff_roundtrip
+
+        A_new = coeff_roundtrip(A_new, wire_dtype, use_kernel=use_pallas,
+                                interpret=pallas_interpret)
 
     # Wire buffer: entering vectors packed in rank order, zero padded.
     enter_rank = jnp.cumsum(entering.astype(jnp.int32)) - 1

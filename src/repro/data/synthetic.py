@@ -21,8 +21,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Iterator, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .partition import dirichlet_client_priors, iid_client_priors
@@ -39,18 +37,26 @@ class SyntheticLMTask:
     client_priors: np.ndarray   # (C, n_classes)
     class_of: np.ndarray        # (V,) class id of each token
 
-    def sample_tokens(
-        self, rng: np.random.Generator, batch: int, seq: int, prior: np.ndarray
-    ) -> np.ndarray:
-        """Sample (batch, seq+1) token ids biased by a class prior."""
-        # per-token sampling weight: prior of its class
+    def chain_cdf(self, prior: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-prior sampling tables: (row-wise transition CDF, start dist).
+
+        Pure function of the (fixed) task and a client prior, so streams
+        compute it once at construction instead of on every draw -- the
+        tables, not the draw loop, used to dominate per-batch host cost.
+        """
         w = prior[self.class_of]                       # (V,)
         trans_w = self.trans * w[None, :]
         trans_w /= trans_w.sum(axis=1, keepdims=True)
+        return np.cumsum(trans_w, axis=1), w / w.sum()
+
+    def sample_tokens(
+        self, rng: np.random.Generator, batch: int, seq: int, prior: np.ndarray,
+        tables: Tuple[np.ndarray, np.ndarray] | None = None,
+    ) -> np.ndarray:
+        """Sample (batch, seq+1) token ids biased by a class prior."""
         # vectorized chain sampling via inverse-CDF on each row
-        cdf = np.cumsum(trans_w, axis=1)
+        cdf, p0 = self.chain_cdf(prior) if tables is None else tables
         x = np.empty((batch, seq + 1), np.int64)
-        p0 = w / w.sum()
         x[:, 0] = rng.choice(self.vocab, size=batch, p=p0)
         u = rng.random((batch, seq))
         for t in range(seq):
@@ -90,16 +96,24 @@ def make_task(
 
 def client_batch_stream(
     task: SyntheticLMTask, client: int, batch: int, seq: int, seed: int = 0
-) -> Iterator[Dict[str, jnp.ndarray]]:
-    """Infinite stream of {tokens, labels} for one client (-1 = eval/uniform)."""
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite stream of {tokens, labels} for one client (-1 = eval/uniform).
+
+    Yields host numpy (token values are identical to the old jnp yields):
+    the consumers stack many per-client draws into one round block before
+    any device placement, and a per-draw ``jnp.asarray`` put two tiny
+    transfers on the host critical path of every round for data that was
+    immediately converted back to numpy by the fused engine's assembler.
+    """
     rng = np.random.default_rng(hash((seed, client)) % (2**31))
     prior = (
         np.ones(task.n_classes) / task.n_classes
         if client < 0 else task.client_priors[client]
     )
+    tables = task.chain_cdf(prior)
     while True:
-        x = task.sample_tokens(rng, batch, seq, prior)
+        x = task.sample_tokens(rng, batch, seq, prior, tables)
         yield {
-            "tokens": jnp.asarray(x[:, :-1], jnp.int32),
-            "labels": jnp.asarray(x[:, 1:], jnp.int32),
+            "tokens": np.asarray(x[:, :-1], np.int32),
+            "labels": np.asarray(x[:, 1:], np.int32),
         }

@@ -108,7 +108,9 @@ class SignSGDMethod(_MethodShell):
 
     def build_codec(self, path, plan, path_idx, use_pallas=False,
                     pallas_interpret=None):
-        return SignSGDCodec(plan.raw_scalars, path_idx=path_idx)
+        return SignSGDCodec(plan.raw_scalars, path_idx=path_idx,
+                            use_pallas=use_pallas,
+                            pallas_interpret=pallas_interpret)
 
 
 class FedQClipMethod(_MethodShell):
@@ -133,17 +135,24 @@ class SVDFedMethod(_MethodShell):
 
     name = "svdfed"
 
-    def __init__(self, policy: CompressionPolicy, gamma: float = 8.0, **kw):
+    def __init__(self, policy: CompressionPolicy, gamma: float = 8.0,
+                 wire_dtype: str = "f32", **kw):
         super().__init__(**kw)
         self.policy = policy
         self.gamma = gamma
+        # explicit (not **kw): _MethodShell swallows unknown kwargs, and a
+        # silently dropped wire_dtype would charge f32 bits for an f32 wire
+        # the caller believed was int8.
+        self.wire_dtype = wire_dtype
 
     def build_codec(self, path, plan, path_idx, use_pallas=False,
                     pallas_interpret=None):
         if not plan.compress:
             return None
         return SVDFedCodec(plan, gamma=self.gamma, seed=self.seed,
-                           path_idx=path_idx)
+                           path_idx=path_idx, use_pallas=use_pallas,
+                           pallas_interpret=pallas_interpret,
+                           wire_dtype=self.wire_dtype)
 
 
 class GradESTCMethod(_MethodShell):
@@ -154,13 +163,15 @@ class GradESTCMethod(_MethodShell):
 
     def __init__(self, policy: CompressionPolicy, variant: str = "full",
                  alpha: float = 1.3, beta: float = 1.0, ef: bool = False,
-                 **kw):
+                 wire_dtype: str = "f32", **kw):
         assert variant in ("full", "first", "all", "k")
         super().__init__(**kw)
         self.policy = policy
         self.variant = variant
         self.alpha, self.beta = alpha, beta
         self.ef = ef
+        # explicit (not **kw) for the same reason as SVDFedMethod
+        self.wire_dtype = wire_dtype
 
     def build_codec(self, path, plan, path_idx, use_pallas=False,
                     pallas_interpret=None):
@@ -169,7 +180,8 @@ class GradESTCMethod(_MethodShell):
         codec = GradESTCCodec(plan, seed=self.seed, path_idx=path_idx,
                               variant=self.variant, alpha=self.alpha,
                               beta=self.beta, use_pallas=use_pallas,
-                              pallas_interpret=pallas_interpret)
+                              pallas_interpret=pallas_interpret,
+                              wire_dtype=self.wire_dtype)
         if self.ef:
             codec = EFCodec(codec, (plan.stack, plan.l, plan.m))
         return codec

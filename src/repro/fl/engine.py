@@ -204,6 +204,9 @@ def _build_chunk(arch, lr: float, server_lr: float, codecs, dl_codecs,
         return (new_params, new_cstate, new_shared, new_dl_state,
                 new_dl_shared), packed
 
+    # Only the carried state is donated: the int32 batch block has no
+    # same-shape output to alias with, so donating it just trips XLA's
+    # unusable-donation warning every chunk.
     @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
     def chunk_fn(params, cstate, shared, dl_state, dl_shared, batches,
                  round_ids):
@@ -492,24 +495,31 @@ def run_fl_fused(cfg: FLConfig,
         """Host side of a chunk: the stacked (Kc, C_pad, steps, B, S) batch
         block, drawn per round / per selected client in the same order as
         the reference loop (padding lanes replicate the round's first
-        selected client -- the in-jit mirror of ``sel[0]``)."""
-        per_round = []
-        for r in range(start, end):
-            per_client = []
-            for c in sel_table[r]:
-                bs = [next(su.streams[int(c)]) for _ in range(cfg.local_steps)]
-                per_client.append(
-                    {kk: np.stack([np.asarray(b[kk]) for b in bs])
-                     for kk in bs[0]})
-            per_round.append({kk: np.stack([pc[kk] for pc in per_client])
-                              for kk in per_client[0]})
-        block = {kk: np.stack([pr[kk] for pr in per_round])
-                 for kk in per_round[0]}
+        selected client -- the in-jit mirror of ``sel[0]``).
+
+        Fills one preallocated block per key instead of stacking
+        K*C_sel*steps small arrays: for the cheap codecs the round is
+        host-bound, and this assembler (plus the stream draw behind it) is
+        the host critical path that the K-round scan cannot amortize --
+        see the stream-side half of the fix in ``data/synthetic.py``."""
+        kc = end - start
+        block: Dict[str, np.ndarray] = {}
+        for i, r in enumerate(range(start, end)):
+            for j, c in enumerate(sel_table[r]):
+                stream = su.streams[int(c)]
+                for s in range(cfg.local_steps):
+                    b = next(stream)
+                    if not block:
+                        block = {
+                            kk: np.empty(
+                                (kc, c_pad, cfg.local_steps) + np.shape(v),
+                                np.asarray(v).dtype)
+                            for kk, v in b.items()}
+                    for kk, v in b.items():
+                        block[kk][i, j, s] = v
         if c_pad > n_sel:
-            reps = c_pad - n_sel
-            block = {kk: np.concatenate(
-                [v, np.repeat(v[:, :1], reps, axis=1)], axis=1)
-                for kk, v in block.items()}
+            for v in block.values():
+                v[:, n_sel:] = v[:, :1]
         return place(block)
 
     chunks = plan_chunks(cfg.rounds, cfg.eval_every, K)

@@ -1,25 +1,37 @@
 """Pallas TPU kernels for GradESTC hot spots.
 
   * gradestc_encode -- fused A = M^T G, E = G - M A  (compression hot path)
+                       + encode_quant (project -> int8 wire -> residual)
   * gradestc_decode -- blocked Ghat = M A            (server reconstruction)
+                       + decode_wire (int8 dequant fused into the GEMM)
   * quant           -- block-wise stochastic int8     (FedPAQ baseline, TPU-native)
+  * wire            -- fused quantize -> bit-pack wire passes (sign-pack,
+                       quant+pack, int8 coefficient wire) and their inverses
   * flash_attention -- fused causal/window/GQA attention (SPerf, prefill)
   * ops             -- jit'd public wrappers (padding, block-size choice, dispatch)
-  * ref             -- pure-jnp oracles
+  * ref             -- pure-jnp oracles (incl. the canonical packed layouts)
 
 Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU with interpret=True.
 """
 
-from . import ops, ref
+from . import ops, ref, wire
 from .flash_attention import flash_attention_pallas
-from .gradestc_decode import decode_pallas
-from .gradestc_encode import encode_pallas
+from .gradestc_decode import decode_pallas, decode_wire_pallas
+from .gradestc_encode import encode_pallas, encode_quant_pallas
 from .quant import block_dequant_pallas, block_quant_pallas
+from .wire import (
+    coeff_dequant_pallas, coeff_quant_pallas, quant_pack_pallas,
+    sign_pack_pallas, sign_unpack_pallas, unpack_dequant_pallas,
+)
 
 __all__ = [
-    "ops", "ref",
+    "ops", "ref", "wire",
     "encode_pallas", "decode_pallas",
+    "encode_quant_pallas", "decode_wire_pallas",
     "block_quant_pallas", "block_dequant_pallas",
+    "sign_pack_pallas", "sign_unpack_pallas",
+    "quant_pack_pallas", "unpack_dequant_pallas",
+    "coeff_quant_pallas", "coeff_dequant_pallas",
     "flash_attention_pallas",
 ]

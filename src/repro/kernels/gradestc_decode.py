@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["decode_pallas"]
+from . import ref
+
+__all__ = ["decode_pallas", "decode_wire_pallas"]
 
 
 def _decode_kernel(m_ref, a_ref, o_ref):
@@ -54,3 +56,50 @@ def decode_pallas(
         out_shape=jax.ShapeDtypeStruct((l, m), M.dtype),
         interpret=interpret,
     )(M, A)
+
+
+# ---------------------------------------------------------------------------
+# fused int8-dequant + reconstruction (server side of the int8 coeff wire)
+# ---------------------------------------------------------------------------
+
+def _decode_wire_kernel(m_ref, c_ref, s_ref, o_ref):
+    A = c_ref[...].astype(jnp.float32) * (s_ref[...] * ref.INV127)  # (k, 512)
+    out = jax.lax.dot_general(
+        m_ref[...], A, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def decode_wire_pallas(
+    M: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    block_l: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Ghat = M (codes * scales / 127): dequantize the int8 coefficient wire
+    inside the GEMM pass instead of materializing the f32 coefficients.
+
+    M: (l, k), codes: (k, m) int8, scales: (k, m/512);
+    l % block_l == 0 and m % 512 == 0 (the wire's scale-block width).
+    """
+    l, k = M.shape
+    k2, m = codes.shape
+    assert k == k2 and l % block_l == 0 and m % 512 == 0
+
+    grid = (l // block_l, m // 512)
+    return pl.pallas_call(
+        _decode_wire_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, 512), lambda i, j: (0, j)),
+            pl.BlockSpec((k, 1), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_l, 512), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, m), M.dtype),
+        interpret=interpret,
+    )(M, codes, scales)

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["encode_pallas"]
+from . import ref
+
+__all__ = ["encode_pallas", "encode_quant_pallas"]
 
 
 def _encode_kernel(m_ref, g_ref, a_ref, e_ref):
@@ -85,6 +87,70 @@ def encode_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((k, m), G.dtype),
+            jax.ShapeDtypeStruct((l, m), G.dtype),
+        ],
+        interpret=interpret,
+    )(M, G)
+
+
+# ---------------------------------------------------------------------------
+# fused projection + int8 coefficient wire (SVDFed steady-state uplink)
+# ---------------------------------------------------------------------------
+
+def _encode_quant_kernel(m_ref, g_ref, c_ref, s_ref, e_ref):
+    """One (l, 512) column block: project, int8-quantize, residual vs ship."""
+    M = m_ref[...]                                  # (l, k)
+    G = g_ref[...]                                  # (l, 512)
+    A = jax.lax.dot_general(
+        M, G, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (k, 512)
+    scale = jnp.maximum(jnp.max(jnp.abs(A), axis=1, keepdims=True), 1e-12)
+    codes = jnp.clip(jnp.round(A / scale * 127.0), -127.0, 127.0)
+    ship = codes * (scale * ref.INV127)
+    Ghat = jax.lax.dot_general(
+        M.astype(jnp.float32), ship, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    c_ref[...] = codes.astype(jnp.int8)
+    s_ref[...] = scale
+    e_ref[...] = (G.astype(jnp.float32) - Ghat).astype(e_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_quant_pallas(
+    M: jnp.ndarray, G: jnp.ndarray, *, interpret: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused A = M^T G -> int8 wire -> E = G - M ship, one G pass.
+
+    The column tile is pinned at 512 (the wire's scale-block width) so each
+    grid step owns exactly one scale column; ``ops.encode_quant`` checks the
+    VMEM budget fits this tile and falls back to the oracle otherwise.
+
+    Args: M (l, k), G (l, m) with m % 512 == 0.
+    Returns (codes int8 (k, m), scales f32 (k, m/512), E (l, m) G.dtype) --
+    the residual is against the *shipped* (dequantized) coefficients, the
+    error the server actually cannot see.
+    """
+    l, k = M.shape
+    l2, m = G.shape
+    assert l == l2 and m % 512 == 0
+    grid = (m // 512,)
+    return pl.pallas_call(
+        _encode_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, k), lambda j: (0, 0)),          # M pinned
+            pl.BlockSpec((l, 512), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, 512), lambda j: (0, j)),
+            pl.BlockSpec((k, 1), lambda j: (0, j)),
+            pl.BlockSpec((l, 512), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.int8),
+            jax.ShapeDtypeStruct((k, m // 512), jnp.float32),
             jax.ShapeDtypeStruct((l, m), G.dtype),
         ],
         interpret=interpret,

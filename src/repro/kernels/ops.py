@@ -16,13 +16,19 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .gradestc_decode import decode_pallas
-from .gradestc_encode import encode_pallas
+from .gradestc_decode import decode_pallas, decode_wire_pallas
+from .gradestc_encode import encode_pallas, encode_quant_pallas
 from .quant import block_dequant_pallas, block_quant_pallas
+from .wire import (
+    coeff_quant_pallas, quant_pack_pallas, sign_pack_pallas,
+    sign_unpack_pallas, unpack_dequant_pallas,
+)
 
 __all__ = [
     "encode", "decode", "block_quantize", "block_dequantize",
     "quantize_update", "choose_block_m", "VMEM_BUDGET_BYTES",
+    "sign_wire", "sign_unwire", "block_quant_wire", "block_dequant_wire",
+    "coeff_quant", "coeff_roundtrip", "encode_quant", "decode_wire",
 ]
 
 # v5e VMEM is ~128 MiB/core architecturally but ~16 MiB is the practical
@@ -131,24 +137,34 @@ def quantize_update(
     (FedPAQ, FedQClip) -- the same ``use_pallas`` switch the GradESTC
     encode takes.
 
+    Both paths materialize the **packed uint32 wire words** on device and
+    reconstruct from them, so what the codec charges the ledger for is what
+    actually exists in memory.  The pack/unpack roundtrip is lossless on the
+    integer codes, so reconstructions are bit-identical to the pre-wire
+    formulation.
+
     ``use_pallas=False``: the paper's global-max-abs stochastic quantizer
-    (one 32-bit scale per tensor; ``core.baselines.quantize_stochastic``).
-    ``use_pallas=True``: the TPU-native block-local quantizer
-    (``quant.block_quant_pallas``; one 32-bit scale per ``block`` entries,
-    interpret mode on CPU).  Returns the server-side reconstruction; byte
-    accounting for either wire format lives with the codec
-    (``core.codecs.FedPAQCodec.charge_bits``).
+    (one 32-bit scale per tensor; ``core.baselines.quantize_stochastic``),
+    packed via the jnp oracle.
+    ``use_pallas=True``: the TPU-native block-local quantizer fused with the
+    bit-pack (``wire.quant_pack_pallas``; one 32-bit scale per ``block``
+    entries, interpret mode on CPU).  Returns the server-side
+    reconstruction; byte accounting for either wire format lives with the
+    codec (``core.codecs.FedPAQCodec.charge_bits``).
     """
     if not use_pallas:
         from repro.core.baselines import dequantize, quantize_stochastic
 
         codes, scale = quantize_stochastic(g, key, bits)
-        return dequantize(codes, scale, bits).astype(g.dtype)
-    codes, scales, pad = block_quantize(
-        g, key, block=block, bits=bits, use_kernel=True, interpret=interpret
+        words = ref.pack_codes_ref(codes, bits)
+        codes2 = ref.unpack_codes_ref(words, bits, g.shape[0]).astype(jnp.int32)
+        return dequantize(codes2, scale, bits).astype(g.dtype)
+    words, scales, pad = block_quant_wire(
+        g, key, block=block, bits=bits, interpret=interpret
     )
-    return block_dequantize(
-        codes, scales, pad, block=block, bits=bits, out_dtype=g.dtype
+    return block_dequant_wire(
+        words, scales, pad, block=block, bits=bits, interpret=interpret,
+        out_dtype=g.dtype,
     )
 
 
@@ -170,3 +186,206 @@ def block_dequantize(
             interpret=interp, out_dtype=out_dtype,
         )
     return out[: codes.shape[0] - pad] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# packed wire dispatchers (DESIGN.md "Wire-format layer")
+# ---------------------------------------------------------------------------
+#
+# Each dispatcher pads to the (rows, WIRE_BLOCK) kernel layout, picks a row
+# tile, and crops the flat wire back to the exact word count the ledger
+# charges for.  ``use_kernel=False`` (or a shape/bit-width the kernels do not
+# cover) routes to the identical ref.py oracle -- the two paths are
+# bit-exact, which tests/test_wire.py asserts per kernel.
+
+def _pick_rows(rows: int) -> int:
+    br = rows if rows < 256 else 256
+    while rows % br:
+        br -= 1
+    return br
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def sign_wire(
+    g: jnp.ndarray, *, use_kernel: bool = True, interpret: bool | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """signSGD uplink: flat g (n,) -> (words uint32 (ceil(n/32),), scale ()).
+
+    scale is mean(|g|) via the canonical two-stage reduction
+    (ref.mean_abs_ref); the kernel emits the per-row partials and the final
+    sum happens here, so both paths share one float reduction tree.
+    """
+    n = g.shape[0]
+    if not use_kernel:
+        return ref.sign_pack_ref(g)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    pad = (-n) % ref.WIRE_BLOCK
+    gp = g.astype(jnp.float32)
+    if pad:
+        gp = jnp.pad(gp, (0, pad))
+    rows = gp.shape[0] // ref.WIRE_BLOCK
+    words2, rowsums = sign_pack_pallas(
+        gp.reshape(rows, ref.WIRE_BLOCK),
+        block_rows=_pick_rows(rows), interpret=interp,
+    )
+    nw = -(-n // 32)
+    return words2.reshape(-1)[:nw], ref.pairwise_sum(rowsums) / n
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_kernel", "interpret"))
+def sign_unwire(
+    words: jnp.ndarray, scale: jnp.ndarray, n: int, *,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Inverse: packed sign bits + scale -> (n,) f32 (+scale / -scale)."""
+    if not use_kernel:
+        return ref.sign_unpack_ref(words, scale, n)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    wpr = ref.WIRE_BLOCK // 32
+    rows = -(-n // ref.WIRE_BLOCK)
+    pad = rows * wpr - words.shape[0]
+    wp = jnp.pad(words, (0, pad)) if pad else words
+    out = sign_unpack_pallas(
+        wp.reshape(rows, wpr), scale,
+        block_rows=_pick_rows(rows), interpret=interp,
+    )
+    return out.reshape(-1)[:n]
+
+
+def block_quant_wire(
+    g: jnp.ndarray, key: jax.Array, *, bits: int = 8, block: int = 512,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Fused block-quantize + bit-pack of a flat update (FedPAQ/FedQClip).
+
+    Returns (words uint32, scales (ceil(n/block),) f32, pad).  The fused
+    kernel covers ``block == WIRE_BLOCK`` and ``bits in {2, 4, 8}`` (bit
+    widths whose codes tile a 512-lane row evenly); other widths take the
+    jnp oracle, so any (bits >= 2, block) stays valid.  bits == 1 is
+    rejected: the symmetric signed code book has 2^(bits-1) - 1 = 0 levels
+    there -- a 1-bit wire is the *sign* format (``sign_wire``).
+    """
+    assert bits >= 2, "1-bit quantization is the sign wire (ops.sign_wire)"
+    n = g.shape[0]
+    pad = (-n) % block
+    gp = jnp.pad(g, (0, pad)) if pad else g
+    u = jax.random.uniform(key, gp.shape, jnp.float32)
+    kernel_ok = (use_kernel and block == ref.WIRE_BLOCK
+                 and bits in (2, 4, 8))
+    if not kernel_ok:
+        words, scales = ref.quant_pack_ref(gp, u, block, bits)
+        return words, scales, pad
+    interp = (not _on_tpu()) if interpret is None else interpret
+    rows = gp.shape[0] // block
+    words2, scales = quant_pack_pallas(
+        gp.reshape(rows, block).astype(jnp.float32),
+        u.reshape(rows, block),
+        bits=bits, block_rows=_pick_rows(rows), interpret=interp,
+    )
+    return words2.reshape(-1), scales, pad
+
+
+def block_dequant_wire(
+    words: jnp.ndarray, scales: jnp.ndarray, pad: int, *, bits: int = 8,
+    block: int = 512, use_kernel: bool = True,
+    interpret: bool | None = None, out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Inverse wire pass: unpack + un-bias + dequantize, cropping ``pad``."""
+    assert bits >= 2, "1-bit codes are the sign wire (ops.sign_unwire)"
+    rows = scales.shape[0]
+    n_p = rows * block
+    kernel_ok = (use_kernel and block == ref.WIRE_BLOCK
+                 and bits in (2, 4, 8))
+    if not kernel_ok:
+        out = ref.unpack_dequant_ref(words, scales, n_p, block, bits)
+        out = out.astype(out_dtype)
+    else:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        out = unpack_dequant_pallas(
+            words.reshape(rows, -1), scales,
+            bits=bits, block_rows=_pick_rows(rows), interpret=interp,
+            out_dtype=out_dtype,
+        ).reshape(-1)
+    return out[: n_p - pad] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def coeff_quant(
+    A: jnp.ndarray, *, use_kernel: bool = True, interpret: bool | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """int8 coefficient wire for a (k, m) matrix: one scale per (row,
+    512-column block), deterministic rounding.  Returns (codes int8 (k, m),
+    scales (k, ceil(m/512)), ship f32 (k, m))."""
+    if not use_kernel:
+        return ref.coeff_quant_ref(A)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    k, m = A.shape
+    Ap, pad = _pad_cols(A.astype(jnp.float32), ref.WIRE_BLOCK)
+    codes, scales, ship = coeff_quant_pallas(Ap, interpret=interp)
+    if pad:
+        codes, ship = codes[:, :m], ship[:, :m]
+    return codes, scales, ship
+
+
+@functools.partial(jax.jit, static_argnames=("wire_dtype", "use_kernel", "interpret"))
+def coeff_roundtrip(
+    A: jnp.ndarray, wire_dtype: str = "f32", *, use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Ship a coefficient matrix through its wire format and back.
+
+    "f32" is the identity (exact 32-bit wire), "bf16" pair-packs bitcast
+    half-words into uint32 (ref oracle -- a cast plus lossless packing),
+    "int8" runs the scaled deterministic quantizer.  Client and server both
+    see the returned value, so the two basis mirrors stay in sync.
+    """
+    if wire_dtype == "f32":
+        return A
+    if wire_dtype == "bf16":
+        words = ref.bf16_pack_ref(A)
+        return ref.bf16_unpack_ref(words, A.shape[-1]).astype(A.dtype)
+    assert wire_dtype == "int8", f"unknown wire_dtype {wire_dtype!r}"
+    _, _, ship = coeff_quant(A, use_kernel=use_kernel, interpret=interpret)
+    return ship.astype(A.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def encode_quant(
+    M: jnp.ndarray, G: jnp.ndarray, *, use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused project + int8 wire: A = M^T G shipped as int8 codes, residual
+    against the shipped value (SVDFed's steady-state uplink).
+
+    Returns (codes int8 (k, m), scales (k, ceil(m/512)), E (l, m)).
+    """
+    if not use_kernel:
+        return ref.encode_quant_ref(M, G)
+    l, k = M.shape
+    if choose_block_m(l, k, G.dtype) < 512:
+        return ref.encode_quant_ref(M, G)   # l too large for the 512 tile
+    interp = (not _on_tpu()) if interpret is None else interpret
+    m = G.shape[1]
+    Gp, pad = _pad_cols(G, 512)
+    codes, scales, E = encode_quant_pallas(M, Gp, interpret=interp)
+    if pad:
+        codes, E = codes[:, :m], E[:, :m]
+    return codes, scales, E
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def decode_wire(
+    M: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray, *,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Ghat = M dequant(codes): the server side of the int8 coefficient
+    wire, dequantization fused into the reconstruction GEMM."""
+    if not use_kernel:
+        return ref.decode_ref(M, ref.coeff_dequant_ref(codes, scales))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    l, k = M.shape
+    m = codes.shape[1]
+    cp, pad = _pad_cols(codes, 512)
+    bl = 256 if l % 256 == 0 else (128 if l % 128 == 0 else l)
+    out = decode_wire_pallas(M, cp, scales, block_l=bl, interpret=interp)
+    return out[:, :m] if pad else out

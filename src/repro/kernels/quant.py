@@ -25,6 +25,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["block_quant_pallas", "block_dequant_pallas", "quant_levels"]
@@ -97,7 +98,9 @@ def block_quant_pallas(
 def _dequant_kernel(levels, c_ref, s_ref, o_ref):
     c = c_ref[...].astype(jnp.float32)
     s = s_ref[...].astype(jnp.float32)
-    o_ref[...] = (c * (s[:, None] / levels)).astype(o_ref.dtype)
+    # Reciprocal-multiply is the *defined* dequant (see ref.block_dequant_ref)
+    inv = float(np.float32(1.0) / np.float32(levels))
+    o_ref[...] = (c * (s[:, None] * inv)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "bits", "block_rows", "interpret", "out_dtype"))

@@ -1,19 +1,60 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These are the semantics the kernels must match (asserted across a
-shape/dtype sweep in tests/test_kernels.py, kernels run with interpret=True
-on CPU).
+shape/dtype sweep in tests/test_kernels.py and tests/test_wire.py, kernels
+run with interpret=True on CPU).
+
+Wire-format conventions (DESIGN.md "Wire-format layer")
+-------------------------------------------------------
+All packed wire words are ``uint32`` in the canonical layout
+
+    code i  ->  word i // cpw,  shift (i % cpw) * bits,   cpw = 32 // bits
+
+i.e. little-endian within a word, codes in flat row-major order.  Quantized
+codes are packed *biased*: a signed code in ``[-levels, levels]`` ships as
+``code + levels`` (max ``2*levels = 2**bits - 2``, which fits ``bits``).
+Scales ride next to the words as f32 -- one per ``WIRE_BLOCK`` codes for the
+block quantizer, one per (row, 512-column block) for coefficient matrices,
+one global mean-|g| for the sign wire.
+
+The sign wire's scale is a **two-stage** reduction: |g| is padded to
+``(rows, WIRE_BLOCK)``, summed per row, then across rows.  The Pallas kernel
+produces the per-row partials and the dispatcher sums them, so oracle and
+kernel see the identical float reduction tree (bit-exactness is asserted,
+not approximated).
 """
 
 from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .quant import quant_levels
 
-__all__ = ["encode_ref", "decode_ref", "block_quant_ref", "block_dequant_ref"]
+__all__ = [
+    "WIRE_BLOCK",
+    "encode_ref", "decode_ref", "block_quant_ref", "block_dequant_ref",
+    "pack_codes_ref", "unpack_codes_ref",
+    "sign_pack_ref", "sign_unpack_ref", "mean_abs_ref",
+    "quant_pack_ref", "unpack_dequant_ref",
+    "coeff_quant_ref", "coeff_dequant_ref",
+    "bf16_pack_ref", "bf16_unpack_ref",
+    "encode_quant_ref",
+]
+
+#: codes per scale row for every packed wire format (also the lane width the
+#: Pallas kernels tile against -- 4 * the f32 min-tile lane count).
+WIRE_BLOCK = 512
+
+# Single-rounded f32 reciprocal of the int8 range.  The coefficient wire's
+# dequant is *defined* as codes * (scale * INV127): multiplying by the same
+# pre-rounded constant on every path (oracle, wire kernels, fused GEMMs)
+# keeps them bit-identical regardless of whether XLA strength-reduces a
+# division in one fusion context but not another.
+INV127 = float(np.float32(1.0) / np.float32(127.0))
 
 
 def encode_ref(M: jnp.ndarray, G: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -62,5 +103,201 @@ def block_dequant_ref(
     codes: jnp.ndarray, scales: jnp.ndarray, block: int, bits: int = 8
 ) -> jnp.ndarray:
     levels = quant_levels(bits)
+    # Single-rounded f32 reciprocal, multiplied -- not divided -- so the
+    # oracle and the Pallas kernels share one bit-exact dequant definition
+    # (XLA strength-reduces /const to *recip inside kernels; doing it
+    # explicitly on both sides removes the 1-ulp split).
+    inv = float(np.float32(1.0) / np.float32(levels))
     cb = codes.reshape(-1, block).astype(jnp.float32)
-    return (cb * (scales[:, None] / levels)).reshape(codes.shape)
+    return (cb * (scales[:, None] * inv)).reshape(codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# bit-packing primitives (canonical layout, see module docstring)
+# ---------------------------------------------------------------------------
+
+def pack_codes_ref(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned codes in [0, 2**bits - 1] into dense uint32 wire words.
+
+    codes: (..., n) any integer dtype.  Returns (..., ceil(n / cpw)) uint32.
+    The tail word is zero-padded (pad codes are 0).
+    """
+    assert 1 <= bits <= 16
+    cpw = 32 // bits
+    n = codes.shape[-1]
+    pad = (-n) % cpw
+    c = codes.astype(jnp.uint32)
+    if pad:
+        c = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
+    c = c.reshape(c.shape[:-1] + (-1, cpw))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits)
+    # disjoint bit fields: sum == OR, and sum lowers to one reduction
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes_ref(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes_ref`: (..., nw) uint32 -> (..., n) uint32."""
+    cpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits)
+    c = (words[..., :, None] >> shifts) & mask
+    return c.reshape(words.shape[:-1] + (-1,))[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# sign wire (signSGD): 1 bit/entry + one global mean-|g| scale
+# ---------------------------------------------------------------------------
+
+def pairwise_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the last axis via a fixed pairwise binary tree.
+
+    Built from elementwise adds on strided slices only -- there is no
+    reduce op for XLA to re-associate, so every backend (eager, jit with
+    any fusion context, vmap, Mosaic) produces bit-identical f32 partials.
+    This is the *defined* accumulation order of the sign wire's scale; the
+    sign-pack kernel computes its per-row partials with the same tree.
+    Non-power-of-two lengths are zero-padded (exact: s + 0.0 == s for the
+    non-negative partials this is used on).
+    """
+    c = x.shape[-1]
+    p = 1 << max(c - 1, 0).bit_length()        # next power of two
+    if p != c:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - c)])
+    while p > 1:
+        x = x[..., ::2] + x[..., 1::2]
+        p //= 2
+    return x[..., 0]
+
+
+def mean_abs_ref(g: jnp.ndarray) -> jnp.ndarray:
+    """mean(|g|) via the canonical two-stage (rows, WIRE_BLOCK) reduction.
+
+    Stage 1: per-row pairwise sums of |g| over WIRE_BLOCK lanes (the
+    partials the sign-pack kernel emits); stage 2: pairwise sum across
+    rows.  ``jnp.mean`` over the flat vector would drift in the last ulp
+    between fusion contexts and break the kernel-vs-oracle exactness
+    assertions -- the pairwise tree has exactly one evaluation order.
+    """
+    n = g.shape[-1]
+    pad = (-n) % WIRE_BLOCK
+    a = jnp.abs(g.astype(jnp.float32))
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+    rows = pairwise_sum(a.reshape(a.shape[:-1] + (-1, WIRE_BLOCK)))
+    return pairwise_sum(rows) / n
+
+
+def sign_pack_ref(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """signSGD wire: bit i = (g_i < 0), plus the mean-|g| scale.
+
+    Note the wire semantics at exact zeros: ``jnp.sign(0) = 0`` but a 1-bit
+    wire has no zero code, so g == 0 ships as +scale.  Zeros are
+    measure-zero in gradients; the codec owns this definition on both the
+    encode and reference paths so engine parity is unaffected.
+    """
+    bits = (g < 0).astype(jnp.uint32)
+    return pack_codes_ref(bits, 1), mean_abs_ref(g)
+
+
+def sign_unpack_ref(words: jnp.ndarray, scale: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Reconstruct: +scale where bit == 0, -scale where bit == 1."""
+    b = unpack_codes_ref(words, 1, n).astype(jnp.float32)
+    return (1.0 - 2.0 * b) * scale
+
+
+# ---------------------------------------------------------------------------
+# quantize+pack wire (FedPAQ / FedQClip block path)
+# ---------------------------------------------------------------------------
+
+def quant_pack_ref(
+    g: jnp.ndarray, uniforms: jnp.ndarray, block: int = WIRE_BLOCK,
+    bits: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """block_quant then bias (+levels) and bit-pack in one oracle.
+
+    Returns (words uint32 (n*bits/32 rounded up), scales (n/block,)).
+    """
+    codes, scales = block_quant_ref(g, uniforms, block, bits)
+    levels = int(quant_levels(bits))
+    biased = codes.astype(jnp.int32) + levels          # [0, 2*levels]
+    return pack_codes_ref(biased, bits), scales
+
+
+def unpack_dequant_ref(
+    words: jnp.ndarray, scales: jnp.ndarray, n: int, block: int = WIRE_BLOCK,
+    bits: int = 8,
+) -> jnp.ndarray:
+    """Inverse wire pass: unpack, un-bias, dequantize.  Returns f32 (n,)."""
+    levels = int(quant_levels(bits))
+    c = unpack_codes_ref(words, bits, n).astype(jnp.int32) - levels
+    return block_dequant_ref(c.astype(jnp.int8), scales, block, bits)
+
+
+# ---------------------------------------------------------------------------
+# coefficient wire (GradESTC / SVDFed): int8 or bf16 coefficients
+# ---------------------------------------------------------------------------
+
+def coeff_quant_ref(A: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Deterministic int8 wire for a (k, m) coefficient matrix.
+
+    One max-|.| scale per (row, WIRE_BLOCK-column block); codes are
+    round-to-nearest(-even) in [-127, 127].  Deterministic (no stochastic
+    rounding) because coefficients are shipped, reconstructed, *and* fed back
+    into the client's own basis state -- client and server must agree on the
+    exact shipped value, so the roundtrip ``ship`` is returned too.
+
+    Returns (codes int8 (k, m), scales f32 (k, ceil(m/512)), ship f32 (k, m)).
+    """
+    k, m = A.shape
+    pad = (-m) % WIRE_BLOCK
+    A32 = A.astype(jnp.float32)
+    Ap = jnp.pad(A32, ((0, 0), (0, pad))) if pad else A32
+    blocks = Ap.reshape(k, -1, WIRE_BLOCK)
+    scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=2), 1e-12)  # (k, nb)
+    x = blocks / scales[:, :, None] * 127.0
+    codes = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    ship = codes.astype(jnp.float32) * (scales[:, :, None] * INV127)
+    return (codes.reshape(k, -1)[:, :m], scales,
+            ship.reshape(k, -1)[:, :m])
+
+
+def coeff_dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(k, m) int8 codes + (k, nb) scales -> (k, m) f32 coefficients."""
+    k, m = codes.shape
+    pad = (-m) % WIRE_BLOCK
+    c = codes.astype(jnp.float32)
+    cp = jnp.pad(c, ((0, 0), (0, pad))) if pad else c
+    out = cp.reshape(k, -1, WIRE_BLOCK) * (scales[:, :, None] * INV127)
+    return out.reshape(k, -1)[:, :m]
+
+
+def bf16_pack_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """f32 (..., n) -> bf16, bitcast to u16, pair-packed into (..., ceil(n/2))
+    uint32 wire words (element 2j in the low half-word)."""
+    h = jax.lax.bitcast_convert_type(
+        x.astype(jnp.bfloat16), jnp.uint16).astype(jnp.uint32)
+    return pack_codes_ref(h, 16)
+
+
+def bf16_unpack_ref(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    h = unpack_codes_ref(words, 16, n).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(h, jnp.bfloat16).astype(jnp.float32)
+
+
+def encode_quant_ref(
+    M: jnp.ndarray, G: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused project + int8-quantize: the SVDFed steady-state uplink oracle.
+
+    A = M^T G, (codes, scales, ship) = coeff_quant(A), and the residual is
+    taken against the *shipped* coefficients: E = G - M ship -- the error the
+    server actually cannot see, which is what error-feedback must accumulate.
+
+    Returns (codes int8 (k, m), scales f32 (k, ceil(m/512)), E (l, m) G.dtype).
+    """
+    M32 = M.astype(jnp.float32)
+    G32 = G.astype(jnp.float32)
+    A = M32.T @ G32
+    codes, scales, ship = coeff_quant_ref(A)
+    E = G32 - M32 @ ship
+    return codes, scales, E.astype(G.dtype)

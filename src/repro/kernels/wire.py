@@ -1,0 +1,293 @@
+"""Pallas TPU kernels: fused quantize -> bit-pack wire passes.
+
+The codecs' wire formats (DESIGN.md "Wire-format layer") all reduce to the
+same canonical uint32 packing: code ``i`` lands in word ``i // cpw`` at shift
+``(i % cpw) * bits`` with ``cpw = 32 // bits``.  Done as separate XLA ops the
+pipeline materializes a full-precision intermediate between quantize and
+pack (and again between unpack and dequantize); each kernel here is one
+HBM->VMEM->HBM pass per direction:
+
+  * ``sign_pack_pallas``    -- bit = (g < 0) packed 32/word + per-row |g| sums
+                               (signSGD; the dispatcher finishes the two-stage
+                               mean so kernel == oracle bit-exactly)
+  * ``sign_unpack_pallas``  -- words -> +-scale reconstruction
+  * ``quant_pack_pallas``   -- block-quantize (per-512 scale, stochastic
+                               rounding) and pack biased codes (FedPAQ/FedQClip)
+  * ``unpack_dequant_pallas``-- words + scales -> f32 reconstruction
+  * ``coeff_quant_pallas``  -- deterministic int8 wire for (k, m) coefficient
+                               matrices, one scale per (row, 512-col block)
+                               (GradESTC / SVDFed int8 coefficient wire)
+  * ``coeff_dequant_pallas``-- int8 codes + scales -> f32 coefficients
+
+Packing uses strided lane slices (``x[:, c::cpw] << c*bits`` OR-chained, an
+unrolled ``cpw``-step loop) rather than a lane-splitting reshape -- Mosaic
+handles strided lane access, and the OR chain is a pure VPU op sequence.
+Grids tile rows of a ``(rows, 512)`` layout; 512 = 4 f32 lane tiles, so word
+counts per row (512/cpw = 16..128) stay lane-aligned.  int8 outputs use the
+(32, 128) min tile only for k >= 32; smaller k validates via interpret mode
+(this container) and pads on real TPU via the ops.py dispatchers.
+
+All kernels are validated bit-exactly against the ``ref.py`` oracles in
+interpret mode (tests/test_wire.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quant import quant_levels
+
+__all__ = [
+    "sign_pack_pallas", "sign_unpack_pallas",
+    "quant_pack_pallas", "unpack_dequant_pallas",
+    "coeff_quant_pallas", "coeff_dequant_pallas",
+]
+
+WIRE_BLOCK = 512        # codes per scale row; keep in sync with ref.WIRE_BLOCK
+
+
+def _pack_rows(codes_u32: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(br, block) unsigned codes -> (br, block//cpw) uint32 words."""
+    cpw = 32 // bits
+    acc = codes_u32[:, 0::cpw] << 0
+    for c in range(1, cpw):
+        acc = acc | (codes_u32[:, c::cpw] << (c * bits))
+    return acc
+
+
+def _unpack_rows(words: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(br, nw) uint32 words -> (br, nw*cpw) uint32 codes."""
+    cpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = [(words >> (c * bits)) & mask for c in range(cpw)]
+    # stack -> (br, nw, cpw); merging the trailing dims restores code order
+    # j*cpw + c, the canonical layout.
+    return jnp.stack(cols, axis=-1).reshape(words.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# sign wire
+# ---------------------------------------------------------------------------
+
+def _sign_pack_kernel(g_ref, w_ref, s_ref):
+    g = g_ref[...].astype(jnp.float32)                  # (br, 512)
+    neg = (g < 0.0).astype(jnp.uint32)
+    w_ref[...] = _pack_rows(neg, 1)
+    # per-row partials via the canonical pairwise tree (see ref.pairwise_sum)
+    s_ref[...] = ref.pairwise_sum(jnp.abs(g))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sign_pack_pallas(
+    g2: jnp.ndarray, *, block_rows: int = 256, interpret: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g2: (rows, 512) f32 -> (words (rows, 16) uint32, rowsums (rows,) f32).
+
+    The caller (ops.sign_wire) finishes the scale: sum(rowsums) / n -- the
+    same two-stage reduction tree as ref.mean_abs_ref.
+    """
+    rows, block = g2.shape
+    assert block == WIRE_BLOCK and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _sign_pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, block // 32), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, block // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2)
+
+
+def _sign_unpack_kernel(w_ref, s_ref, o_ref):
+    b = _unpack_rows(w_ref[...], 1).astype(jnp.float32)
+    o_ref[...] = ((1.0 - 2.0 * b) * s_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sign_unpack_pallas(
+    words2: jnp.ndarray, scale: jnp.ndarray, *, block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """words2: (rows, 16) uint32, scale: () f32 -> (rows, 512) f32."""
+    rows, nw = words2.shape
+    assert nw == WIRE_BLOCK // 32 and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _sign_unpack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, nw), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # scale pinned
+        ],
+        out_specs=pl.BlockSpec((block_rows, WIRE_BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, WIRE_BLOCK), jnp.float32),
+        interpret=interpret,
+    )(words2, scale.reshape(1, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# block-quantize + pack wire (FedPAQ / FedQClip)
+# ---------------------------------------------------------------------------
+
+def _quant_pack_kernel(levels, bits, g_ref, u_ref, w_ref, s_ref):
+    g = g_ref[...].astype(jnp.float32)                  # (br, 512)
+    u = u_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g), axis=1, keepdims=True), 1e-12)
+    x = g / scale * levels
+    lo = jnp.floor(x)
+    codes = lo + (u < (x - lo)).astype(jnp.float32)
+    codes = jnp.clip(codes, -levels, levels)
+    # codes are exact small integers in f32; bias to [0, 2*levels] (fits
+    # ``bits``) and truncate -- identical to the oracle's int path.
+    biased = (codes + levels).astype(jnp.uint32)
+    w_ref[...] = _pack_rows(biased, bits)
+    s_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def quant_pack_pallas(
+    g2: jnp.ndarray, u2: jnp.ndarray, *, bits: int = 8,
+    block_rows: int = 256, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rows, 512) f32 -> (words (rows, 512*bits/32) uint32, scales (rows,)).
+
+    One fused pass of the FedPAQ uplink: per-row max-abs scale, stochastic
+    rounding against u2, bias, bit-pack.  bits must divide 32 evenly into
+    512 (i.e. bits in {1, 2, 4, 8}; ops.py gates other widths to the oracle).
+    """
+    rows, block = g2.shape
+    assert block == WIRE_BLOCK and rows % block_rows == 0
+    assert block % (32 // bits) == 0
+    nw = block // (32 // bits)
+    levels = quant_levels(bits)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_quant_pack_kernel, levels, bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, nw), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2, u2)
+
+
+def _unpack_dequant_kernel(levels, bits, w_ref, s_ref, o_ref):
+    codes = _unpack_rows(w_ref[...], bits).astype(jnp.float32) - levels
+    s = s_ref[...]
+    # Reciprocal-multiply is the *defined* dequant (see ref.block_dequant_ref)
+    inv = float(np.float32(1.0) / np.float32(levels))
+    o_ref[...] = (codes * (s[:, None] * inv)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret", "out_dtype"))
+def unpack_dequant_pallas(
+    words2: jnp.ndarray, scales: jnp.ndarray, *, bits: int = 8,
+    block_rows: int = 256, interpret: bool = False, out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """(rows, 512*bits/32) uint32 + (rows,) scales -> (rows, 512) out_dtype."""
+    rows, nw = words2.shape
+    assert rows % block_rows == 0 and nw == WIRE_BLOCK // (32 // bits)
+    levels = quant_levels(bits)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequant_kernel, levels, bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, nw), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, WIRE_BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, WIRE_BLOCK), out_dtype),
+        interpret=interpret,
+    )(words2, scales)
+
+
+# ---------------------------------------------------------------------------
+# int8 coefficient wire (GradESTC / SVDFed)
+# ---------------------------------------------------------------------------
+
+def _coeff_quant_kernel(a_ref, c_ref, s_ref, p_ref):
+    a = a_ref[...].astype(jnp.float32)                  # (k, 512)
+    scale = jnp.maximum(jnp.max(jnp.abs(a), axis=1, keepdims=True), 1e-12)
+    codes = jnp.clip(jnp.round(a / scale * 127.0), -127.0, 127.0)
+    c_ref[...] = codes.astype(jnp.int8)
+    s_ref[...] = scale
+    p_ref[...] = codes * (scale * ref.INV127)           # shipped value
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coeff_quant_pallas(
+    A: jnp.ndarray, *, interpret: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """A: (k, m) f32, m % 512 == 0 -> (codes int8 (k, m), scales (k, m//512),
+    ship f32 (k, m)).  Deterministic round-to-nearest-even (see
+    ref.coeff_quant_ref for why the wire must be deterministic here)."""
+    k, m = A.shape
+    assert m % WIRE_BLOCK == 0
+    nb = m // WIRE_BLOCK
+    grid = (nb,)
+    return pl.pallas_call(
+        _coeff_quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, WIRE_BLOCK), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((k, WIRE_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((k, 1), lambda j: (0, j)),
+            pl.BlockSpec((k, WIRE_BLOCK), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.int8),
+            jax.ShapeDtypeStruct((k, nb), jnp.float32),
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A)
+
+
+def _coeff_dequant_kernel(c_ref, s_ref, o_ref):
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = c * (s_ref[...] * ref.INV127)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coeff_dequant_pallas(
+    codes: jnp.ndarray, scales: jnp.ndarray, *, interpret: bool = False
+) -> jnp.ndarray:
+    """codes (k, m) int8 + scales (k, m//512) -> (k, m) f32."""
+    k, m = codes.shape
+    assert m % WIRE_BLOCK == 0
+    grid = (m // WIRE_BLOCK,)
+    return pl.pallas_call(
+        _coeff_dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, WIRE_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((k, 1), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((k, WIRE_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, m), jnp.float32),
+        interpret=interpret,
+    )(codes, scales)

@@ -1,12 +1,33 @@
 """repro.launch -- production mesh, sharding policy, dry-run, drivers.
 
+Submodules are exposed lazily (PEP 562): ``repro.launch.env`` must be
+importable -- and ``configure_host()`` callable -- *before* the first jax
+import in the process (XLA reads XLA_FLAGS once, at jax init), so this
+package must not import jax eagerly.
+
 NOTE: importing ``repro.launch.dryrun`` sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` and must happen
 before any other jax initialization; never import it from library code.
 The other modules are safe to import anywhere.
 """
 
-from .mesh import HW, make_local_mesh, make_production_mesh
-from .sharding import MeshPlan, make_plan
+_LAZY = {
+    "HW": ("mesh", "HW"),
+    "make_local_mesh": ("mesh", "make_local_mesh"),
+    "make_production_mesh": ("mesh", "make_production_mesh"),
+    "MeshPlan": ("sharding", "MeshPlan"),
+    "make_plan": ("sharding", "make_plan"),
+}
 
-__all__ = ["HW", "make_local_mesh", "make_production_mesh", "MeshPlan", "make_plan"]
+__all__ = list(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return getattr(mod, attr)

@@ -1,0 +1,115 @@
+"""Host environment tuning for benchmark and training entry points.
+
+XLA reads most host knobs exactly once, at first ``import jax`` -- so this
+module must stay importable without touching jax (``repro.launch`` exposes
+its submodules lazily for the same reason), and ``configure_host()`` must be
+called before the first jax import in the process.
+
+Knobs (defaults only -- anything the user already exported wins):
+
+  TF_CPP_MIN_LOG_LEVEL=4
+      silence TF/XLA C++ banner noise that otherwise drowns bench output.
+  TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+      with tcmalloc preloaded, suppress per-allocation warnings for the
+      multi-GB host buffers the client-batch assembler reuses.
+  XLA_FLAGS --xla_force_host_platform_device_count=N
+      only when ``host_device_count`` is passed; merged into existing
+      XLA_FLAGS, never overriding a count the user already forced.
+
+tcmalloc itself cannot be enabled here: LD_PRELOAD is read by the dynamic
+loader at process start.  ``configure_host`` detects whether it is active
+(via /proc/self/maps) and reports the run.sh-style preload line to use when
+it is not (see SNIPPETS.md / HomebrewNLP-Jax).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+_TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+)
+
+_DEFAULTS = {
+    "TF_CPP_MIN_LOG_LEVEL": "4",
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+}
+
+
+def tcmalloc_active() -> bool:
+    """True when a tcmalloc variant is linked into this process."""
+    try:
+        with open("/proc/self/maps") as f:
+            return "tcmalloc" in f.read()
+    except OSError:  # non-Linux: undetectable, assume not
+        return False
+
+
+def tcmalloc_hint() -> str | None:
+    """The LD_PRELOAD line to get tcmalloc, or None if unavailable/active."""
+    if tcmalloc_active():
+        return None
+    for path in _TCMALLOC_PATHS:
+        if os.path.exists(path):
+            return f"LD_PRELOAD={path}"
+    return None
+
+
+def merge_xla_flag(flags: str, flag: str, value: str, *,
+                   force: bool = False) -> str:
+    """Append ``flag=value`` to an XLA_FLAGS string.
+
+    An already-present flag wins unless ``force`` -- the device-sweep
+    benches must pin their per-child count even when the parent shell
+    exported one.
+    """
+    if flag in flags:
+        if not force:
+            return flags
+        kept = [t for t in flags.split() if not t.startswith(flag)]
+        flags = " ".join(kept)
+    return f"{flags} {flag}={value}".strip()
+
+
+def configure_host(
+    host_device_count: int | None = None, *, env: dict | None = None,
+    verbose: bool = False,
+) -> dict:
+    """Apply default host tuning; returns {knob: value} for what was set.
+
+    Pass ``env`` to tune a child-process environment dict (the device-sweep
+    benches fork one child per device count) instead of ``os.environ``.
+    Mutating ``os.environ`` after jax initialized is too late for XLA_FLAGS,
+    so that combination warns and skips the flag merge.
+    """
+    target = os.environ if env is None else env
+    applied = {}
+    for k, v in _DEFAULTS.items():
+        if k not in target:
+            target[k] = v
+            applied[k] = v
+    if host_device_count is not None:
+        if env is None and "jax" in sys.modules:
+            warnings.warn(
+                "configure_host(host_device_count=...) called after jax was "
+                "imported: XLA_FLAGS is already frozen, flag not applied",
+                stacklevel=2)
+        else:
+            flags = merge_xla_flag(
+                target.get("XLA_FLAGS", ""),
+                "--xla_force_host_platform_device_count",
+                str(host_device_count), force=env is not None)
+            if flags != target.get("XLA_FLAGS", ""):
+                target["XLA_FLAGS"] = flags
+                applied["XLA_FLAGS"] = flags
+    hint = tcmalloc_hint()
+    if verbose:
+        for k, v in applied.items():
+            print(f"[env] {k}={v}", file=sys.stderr)
+        if hint:
+            print(f"[env] tcmalloc not preloaded; for faster host malloc: "
+                  f"{hint} (see DESIGN.md)", file=sys.stderr)
+    return applied

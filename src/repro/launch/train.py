@@ -119,6 +119,11 @@ def main(argv=None) -> int:
                     "$JAX_COMPILATION_CACHE_DIR or ~/.cache/"
                     "repro_jax_compilation)")
     args = ap.parse_args(argv)
+    # Host tuning first: XLA_FLAGS and logging knobs are frozen at the
+    # first jax import, which happens inside _run_sim/_run_spmd.
+    from repro.launch.env import configure_host
+
+    configure_host(verbose=True)
     # Persistent compile cache: repeat training invocations skip XLA
     # compilation of the chunk/step executables entirely.
     from repro.launch.compile_cache import enable_compilation_cache
